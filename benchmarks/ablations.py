@@ -1,0 +1,117 @@
+"""Beyond-paper ablations — isolate each pFedWN mechanism:
+
+  A1  EM weights vs uniform weights over the same selected neighbors
+      (is the EM similarity estimation doing the work, or just averaging?)
+  A2  channel-aware selection vs random selection of the same count
+      (does picking reliable links matter for the LEARNING outcome when
+      erasures are live?)
+  A3  robustness under increasing link-failure rates (the paper's
+      "dynamic and unpredictable channels" claim, swept)
+  A4  α sweep for Eq (1) (local-vs-neighbors balance)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import build_scenario, build_simulation, emit, timed
+from repro.core import aggregation, em
+import jax
+import jax.numpy as jnp
+
+
+def _starve_target(sim, keep: int = 48):
+    """Collaboration only matters when the target is data-poor: keep a
+    sliver of the target's train set (test set untouched)."""
+    d = sim.train_sets[0]
+    d.x, d.y = d.x[:keep], d.y[:keep]
+    sim.sizes = sim.sizes.at[0].set(float(len(d)))
+    return sim
+
+
+def _sim(seed=11, rounds=8, n=10, gamma=5.0, eps=0.15, starve=True):
+    # harder task (noise 0.8) + data-poor target: collaboration quality is
+    # only measurable when local training alone can't saturate
+    sc = build_scenario(seed, n, gamma_th=gamma, eps=eps)
+    sim = build_simulation(seed, sc, rounds=rounds, noise=0.8)
+    if starve:
+        _starve_target(sim)
+    return sc, sim
+
+
+def a1_em_vs_uniform() -> dict:
+    """Run pfedwn normally, then with EM replaced by uniform weights (π is
+    still erasure-masked). Uniform == 'FedAvg over selected neighbors with
+    an α-blend'."""
+    sc, sim = _sim()
+    em_acc = sim.run("pfedwn")["max_target_acc"]
+    # monkeypatch the EM round to return uniform weights
+    orig = sim._em_round
+    try:
+        def uniform(components, pi, x, y):
+            M = pi.shape[0]
+            return jnp.full((M,), 1.0 / M), None
+        sim._em_round = uniform
+        uni_acc = sim.run("pfedwn")["max_target_acc"]
+    finally:
+        sim._em_round = orig
+    return {"em": em_acc, "uniform": uni_acc, "delta": em_acc - uni_acc}
+
+
+def a2_selection_vs_random() -> dict:
+    """Same neighbor COUNT, chosen randomly instead of by P_err; erasures
+    follow the true P_err, so random picks include unreliable links."""
+    sc, sim = _sim(seed=13)
+    chan_acc = sim.run("pfedwn")["max_target_acc"]
+    rng = np.random.default_rng(0)
+    n_sel = max(int(sc.selected.sum()), 1)
+    rand_sel = np.zeros_like(sc.selected)
+    rand_sel[rng.choice(len(sc.selected), n_sel, replace=False)] = True
+    sc2 = dataclasses.replace(sc, selected=rand_sel)
+    sim2 = _starve_target(build_simulation(13, sc2, rounds=8, noise=0.8))
+    rand_acc = sim2.run("pfedwn")["max_target_acc"]
+    return {"channel_aware": chan_acc, "random": rand_acc,
+            "delta": chan_acc - rand_acc, "n_selected": n_sel}
+
+
+def a3_erasure_robustness() -> dict:
+    """Force uniform per-link failure probability f and sweep it."""
+    out = {}
+    for f in (0.0, 0.3, 0.6, 0.9):
+        sc, _ = _sim(seed=17)
+        sc = dataclasses.replace(
+            sc, p_err=np.full_like(sc.p_err, f))
+        sim = _starve_target(build_simulation(17, sc, rounds=8, noise=0.8))
+        out[f] = sim.run("pfedwn")["max_target_acc"]
+    return out
+
+
+def a4_alpha_sweep() -> dict:
+    out = {}
+    for alpha in (0.3, 0.5, 0.7, 0.9):
+        sc, sim = _sim(seed=19)
+        sim.sim.alpha = alpha
+        out[alpha] = sim.run("pfedwn")["max_target_acc"]
+    return out
+
+
+def main() -> None:
+    us, r1 = timed(a1_em_vs_uniform, repeat=1)
+    emit("ablation_em_vs_uniform", us,
+         f"em={r1['em']:.3f};uniform={r1['uniform']:.3f};"
+         f"delta={r1['delta']:+.3f}")
+    us, r2 = timed(a2_selection_vs_random, repeat=1)
+    emit("ablation_selection", us,
+         f"channel={r2['channel_aware']:.3f};random={r2['random']:.3f};"
+         f"delta={r2['delta']:+.3f}")
+    us, r3 = timed(a3_erasure_robustness, repeat=1)
+    emit("ablation_erasures", us,
+         ";".join(f"f{k}={v:.3f}" for k, v in r3.items()))
+    us, r4 = timed(a4_alpha_sweep, repeat=1)
+    emit("ablation_alpha", us,
+         ";".join(f"a{k}={v:.3f}" for k, v in r4.items()))
+
+
+if __name__ == "__main__":
+    main()

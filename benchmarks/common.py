@@ -1,0 +1,80 @@
+"""Shared benchmark plumbing: the wireless scenario builder used by every
+paper-table benchmark, and CSV helpers."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import WirelessConfig
+from repro.configs.paper_cnn import CNNConfig
+from repro.core import selection
+from repro.core.fedsim import FederatedSimulation, FedSimConfig
+from repro.data import (dirichlet_partition, make_client_datasets,
+                        synthetic_image_dataset, train_test_split)
+
+
+@dataclass
+class Scenario:
+    """One paper 'Case': a target client + neighbors with channel state."""
+    target_pos: np.ndarray
+    neighbor_pos: np.ndarray          # (G, 2)
+    p_err: np.ndarray                 # (G,)
+    selected: np.ndarray              # (G,) bool
+
+
+def build_scenario(seed: int, n_neighbors: int, *, gamma_th: float,
+                   eps: float = 0.05,
+                   cfg: WirelessConfig = WirelessConfig()) -> Scenario:
+    rng = np.random.default_rng(seed)
+    target = rng.uniform(5, cfg.area_m - 5, 2)
+    neighbors = rng.uniform(0, cfg.area_m, (n_neighbors, 2))
+    res = selection.select_neighbors(cfg, jnp.asarray(target),
+                                     jnp.asarray(neighbors), eps=eps,
+                                     sinr_threshold=gamma_th)
+    return Scenario(target, neighbors, np.asarray(res.p_err),
+                    np.asarray(res.selected))
+
+
+def build_simulation(seed: int, scenario: Scenario, *, rounds: int,
+                     n_classes: int = 10, image_size: int = 16,
+                     samples: int = 8000, alpha_d: float = 0.1,
+                     lr: float = 0.05, batch: int = 32,
+                     model_widths=(8, 16), hidden: int = 32,
+                     noise: float = 0.35) -> FederatedSimulation:
+    """Paper Sec V-A setup at CI scale: Dirichlet(0.1) non-IID synthetic
+    data, 75/25 split, CNN clients. Client 0 = target."""
+    n_clients = len(scenario.neighbor_pos) + 1
+    base = synthetic_image_dataset(seed, samples, image_size=image_size,
+                                   n_classes=n_classes, noise=noise)
+    parts = dirichlet_partition(base.y, n_clients, alpha=alpha_d, seed=seed)
+    train_sets = make_client_datasets(
+        base, [train_test_split(p, seed=seed + 1)[0] for p in parts])
+    test_sets = make_client_datasets(
+        base, [train_test_split(p, seed=seed + 1)[1] for p in parts])
+    # participants: target + channel-selected neighbors (Sec V-A)
+    pm = np.concatenate([[True], scenario.selected])
+    p_err = np.concatenate([[0.0], scenario.p_err]).astype(np.float32)
+    model_cfg = CNNConfig(image_size=image_size, widths=model_widths,
+                          hidden=hidden, n_classes=n_classes)
+    sim = FedSimConfig(rounds=rounds, batch_size=batch, lr=lr,
+                       alpha=0.7, em_iters=5, seed=seed)
+    return FederatedSimulation(model_cfg, train_sets, test_sets, pm, p_err,
+                               sim)
+
+
+def timed(fn, *args, repeat: int = 3, **kw) -> Tuple[float, object]:
+    out = fn(*args, **kw)           # warmup / result
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    return us, out
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

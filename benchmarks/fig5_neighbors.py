@@ -1,0 +1,65 @@
+"""Fig 5: average number of selected neighbors as a function of the number
+of sub-channels |F|, SINR threshold γ_th, and PPP network density."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.configs import WirelessConfig
+from repro.core import selection, wireless
+
+
+def avg_selected(cfg: WirelessConfig, density: float, gamma_th: float,
+                 iters: int = 20, max_nodes: int = 40) -> float:
+    counts = []
+    for i in range(iters):
+        key = jax.random.PRNGKey(i)
+        pos, valid = wireless.ppp_positions(key, cfg, density, max_nodes)
+        target = jnp.asarray([cfg.area_m / 2, cfg.area_m / 2])
+        res = selection.select_neighbors(cfg, target, pos, valid,
+                                         eps=0.05, sinr_threshold=gamma_th)
+        counts.append(int(np.sum(np.asarray(res.selected & valid))))
+    return float(np.mean(counts))
+
+
+def run() -> dict:
+    out = {}
+    for gamma_th in (5.0, 10.0, 15.0):
+        for F in (8, 14, 20):
+            cfg = dataclasses.replace(WirelessConfig(), n_subchannels=F)
+            for density in (1e-3, 4e-3, 7.5e-3):
+                out[(gamma_th, F, density)] = avg_selected(
+                    cfg, density, gamma_th, iters=8)
+    return out
+
+
+def check_trends(res: dict) -> dict:
+    """Paper claims: more subchannels => more selected; higher γ_th =>
+    fewer selected."""
+    f_up, g_down, n = 0, 0, 0
+    for g in (5.0, 10.0, 15.0):
+        for d in (1e-3, 4e-3, 7.5e-3):
+            if res[(g, 20, d)] >= res[(g, 8, d)]:
+                f_up += 1
+            n += 1
+    for F in (8, 14, 20):
+        for d in (1e-3, 4e-3, 7.5e-3):
+            if res[(15.0, F, d)] <= res[(5.0, F, d)]:
+                g_down += 1
+    return {"F_monotone_frac": f_up / n, "gamma_monotone_frac": g_down / 9}
+
+
+def main() -> None:
+    us, res = timed(run, repeat=1)
+    tr = check_trends(res)
+    emit("fig5_neighbors", us,
+         f"F_up={tr['F_monotone_frac']:.2f};gdown={tr['gamma_monotone_frac']:.2f};"
+         f"sel(g5,F14,d4e-3)={res[(5.0, 14, 4e-3)]:.1f}")
+
+
+if __name__ == "__main__":
+    main()

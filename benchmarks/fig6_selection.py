@@ -1,0 +1,41 @@
+"""Fig 6: selected neighbors |M_n| vs total neighbors |G_n| for varying
+error thresholds ε (a) and SINR thresholds γ_th (b)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_scenario, emit, timed
+
+
+def run() -> dict:
+    out = {}
+    for G in (5, 10, 15, 20):
+        for eps in (0.01, 0.05, 0.1):
+            sel = [int(build_scenario(s, G, gamma_th=10.0, eps=eps)
+                       .selected.sum()) for s in range(6)]
+            out[("eps", G, eps)] = float(np.mean(sel))
+        for gth in (5.0, 10.0, 15.0):
+            sel = [int(build_scenario(s, G, gamma_th=gth, eps=0.05)
+                       .selected.sum()) for s in range(6)]
+            out[("gth", G, gth)] = float(np.mean(sel))
+    return out
+
+
+def check_trends(res: dict) -> dict:
+    eps_ok = sum(res[("eps", G, 0.1)] >= res[("eps", G, 0.01)]
+                 for G in (5, 10, 15, 20)) / 4
+    gth_ok = sum(res[("gth", G, 5.0)] >= res[("gth", G, 15.0)]
+                 for G in (5, 10, 15, 20)) / 4
+    return {"eps_monotone": eps_ok, "gth_monotone": gth_ok}
+
+
+def main() -> None:
+    us, res = timed(run, repeat=1)
+    tr = check_trends(res)
+    emit("fig6_selection", us,
+         f"eps_mono={tr['eps_monotone']:.2f};gth_mono={tr['gth_monotone']:.2f};"
+         f"sel(G10,eps.05,g10)={res[('gth', 10, 10.0)]:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks: interpret-mode wall time is meaningless on CPU,
+so this measures the pure-JAX production paths (chunked attention, EM
+posterior math, pytree mix) that the kernels replace on TPU — the CSV keeps
+the harness honest about what runs where."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.core import em
+from repro.kernels import ref
+from repro.models.attention import chunked_attention
+from repro.utils import tree_weighted_sum
+
+
+def bench_attention() -> None:
+    key = jax.random.PRNGKey(0)
+    B, S, H, KH, Dh = 1, 1024, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KH, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KH, Dh), jnp.float32)
+    pos = jnp.arange(S)
+    f = jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, q_positions=pos, kv_positions=pos, causal=True))
+    us, _ = timed(lambda *a: jax.block_until_ready(f(*a)), q, k, v)
+    flops = 4 * B * H * S * S * Dh / 2       # causal half
+    emit("chunked_attention_1k", us, f"gflops={flops / us / 1e3:.1f}")
+
+
+def bench_em() -> None:
+    key = jax.random.PRNGKey(1)
+    n, M = 4096, 8
+    losses = jax.random.uniform(key, (n, M)) * 4
+    pi0 = jnp.full((M,), 1.0 / M)
+    f = jax.jit(lambda l: em.em_weights(pi0, l, iters=10)[0])
+    us, _ = timed(lambda l: jax.block_until_ready(f(l)), losses)
+    emit("em_weights_4096x8", us, f"iters=10")
+
+
+def bench_mix() -> None:
+    key = jax.random.PRNGKey(2)
+    trees = [{"w": jax.random.normal(jax.random.fold_in(key, i),
+                                     (1024, 1024))} for i in range(4)]
+    pi = jnp.array([0.4, 0.3, 0.2, 0.1])
+    f = jax.jit(lambda ts: tree_weighted_sum(ts, pi))
+    us, _ = timed(lambda ts: jax.block_until_ready(f(ts)), trees)
+    gb = 4 * 1024 * 1024 * 4 / 1e9
+    emit("pi_mix_4x1M", us, f"GBps={gb / (us / 1e6):.1f}")
+
+
+def main() -> None:
+    bench_attention()
+    bench_em()
+    bench_mix()
+
+
+if __name__ == "__main__":
+    main()

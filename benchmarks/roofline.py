@@ -1,0 +1,58 @@
+"""Roofline benchmark: reads the dry-run JSON artifacts and prints the
+three-term roofline per (arch × shape) — EXPERIMENTS.md §Roofline is
+generated from this output."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, timed
+from repro.configs import get_config, get_shape
+from repro.roofline.analysis import roofline_terms
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def run() -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*__pod.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": "fail"})
+            continue
+        cfg = get_config(rec["arch"])
+        shape = get_shape(rec["shape"])
+        src = dict(rec)
+        if "extrapolated" in rec:
+            src.update(rec["extrapolated"])
+        terms = roofline_terms(src, cfg, shape)
+        rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                     "status": "ok", **terms})
+    return rows
+
+
+def main() -> None:
+    us, rows = timed(run, repeat=1)
+    ok = [r for r in rows if r["status"] == "ok"]
+    if not ok:
+        emit("roofline", us, "no_dryrun_artifacts")
+        return
+    dominant = {}
+    for r in ok:
+        dominant[r["dominant"]] = dominant.get(r["dominant"], 0) + 1
+    emit("roofline", us,
+         f"combos={len(ok)};dominant={dominant};"
+         f"worst_useful_ratio="
+         f"{min(r.get('useful_compute_ratio', 1) for r in ok):.3f}")
+    for r in ok:
+        print(f"#   {r['arch']:24s} {r['shape']:12s} "
+              f"comp={r['compute_s']:.3e}s mem={r['memory_s']:.3e}s "
+              f"coll={r['collective_s']:.3e}s dom={r['dominant']} "
+              f"useful={r.get('useful_compute_ratio', 0):.2f}")
+
+
+if __name__ == "__main__":
+    main()

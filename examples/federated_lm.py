@@ -1,0 +1,28 @@
+"""End-to-end driver: train a ~100M-class LM (smollm-135m reduced profile at
+CI scale; pass --full for the real 135M config) for a few hundred steps,
+then run pFedWN rounds between simulated LM clients.
+
+PYTHONPATH=src python examples/federated_lm.py [--steps 200] [--full]
+"""
+import argparse
+import subprocess
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--full", action="store_true")
+args = ap.parse_args()
+
+base = [sys.executable, "-m", "repro.launch.train", "--arch", "smollm-135m",
+        "--steps", str(args.steps), "--batch", "8", "--seq", "256",
+        "--lr", "3e-3", "--ckpt", "experiments/smollm_ckpt.npz"]
+if args.full:
+    base.append("--full")
+print(">>> single-client LM training")
+subprocess.run(base, check=True)
+
+print(">>> pFedWN federated rounds (4 clients)")
+subprocess.run([sys.executable, "-m", "repro.launch.train",
+                "--arch", "smollm-135m", "--clients", "4", "--rounds", "5",
+                "--local-steps", "10", "--batch", "4", "--seq", "128"],
+               check=True)

@@ -1,0 +1,20 @@
+"""Serving example: batched prefill + greedy decode with KV caching on a
+selectable architecture.
+
+PYTHONPATH=src python examples/serve_decode.py --arch starcoder2-15b
+(reduced profile by default; --full for the real config if you have the RAM)
+"""
+import argparse
+import subprocess
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="starcoder2-15b")
+ap.add_argument("--full", action="store_true")
+args = ap.parse_args()
+
+cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", args.arch,
+       "--batch", "4", "--prompt-len", "64", "--gen", "32"]
+if args.full:
+    cmd.append("--full")
+subprocess.run(cmd, check=True)

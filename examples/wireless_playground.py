@@ -1,0 +1,33 @@
+"""Fig 4 analogue: P_err heatmap over neighbor positions for three SINR
+thresholds; prints an ASCII heat map of the area.
+
+PYTHONPATH=src python examples/wireless_playground.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import WirelessConfig
+from repro.core import selection
+
+cfg = WirelessConfig()
+rng = np.random.default_rng(7)
+target = np.array([25.0, 25.0])
+neighbors = rng.uniform(0, 50, (10, 2))
+
+for gamma_th in (5.0, 10.0, 15.0):
+    res = selection.select_neighbors(cfg, jnp.asarray(target),
+                                     jnp.asarray(neighbors), eps=0.05,
+                                     sinr_threshold=gamma_th)
+    p = np.asarray(res.p_err)
+    sel = np.asarray(res.selected)
+    print(f"\n== gamma_th = {gamma_th}:  {sel.sum()} selected ==")
+    grid = [["." for _ in range(25)] for _ in range(25)]
+    tx, ty = int(target[0] // 2), int(target[1] // 2)
+    grid[ty][tx] = "T"
+    for i, (x, y) in enumerate(neighbors):
+        gx, gy = int(x // 2), int(y // 2)
+        grid[gy][gx] = "S" if sel[i] else "x"
+    for row in grid[::-1]:
+        print("".join(row))
+    for i, (pe, s) in enumerate(zip(p, sel)):
+        print(f"  n{i}: P_err={pe:.3f} {'<- selected' if s else ''}")

@@ -1,0 +1,83 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# Memory probe: compile one (arch x shape) combo and dump the largest
+# per-device HLO buffers + per-kind collective bytes — the 'profiler' for
+# the §Perf hypothesis loop (no real hardware, so the lowered IR is the
+# profile).
+#
+#   PYTHONPATH=src python scripts/memprobe.py --arch starcoder2-15b \
+#       --shape train_4k [--multi-pod] [--top 15]
+
+import argparse
+import collections
+import re
+
+import jax
+
+from repro.configs import get_config, get_shape
+from repro.launch.dryrun import lower_combo
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.hlo import collective_bytes_from_hlo
+
+DT = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+      "pred": 1, "s64": 8, "f64": 8}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--min-gib", type=float, default=0.25)
+    ap.add_argument("--grep", default=None,
+                    help="print HLO lines producing shapes matching this")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = get_shape(args.shape)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    _, co = lower_combo(cfg, shape, mesh, multi_pod=args.multi_pod,
+                        unroll=False)
+    mem = co.memory_analysis()
+    print(f"== {args.arch} x {args.shape} "
+          f"({'2x16x16' if args.multi_pod else '16x16'}) ==")
+    print(f"temp={mem.temp_size_in_bytes/2**30:.2f} GiB  "
+          f"args={mem.argument_size_in_bytes/2**30:.2f} GiB  "
+          f"out={mem.output_size_in_bytes/2**30:.2f} GiB")
+    txt = co.as_text()
+    coll = collective_bytes_from_hlo(txt)
+    print("collectives:", {k: f"{v/2**30:.2f}GiB"
+                           for k, v in coll["by_kind"].items()},
+          f"total={coll['total']/2**30:.2f} GiB")
+
+    found = collections.Counter()
+    for m in re.finditer(r"([a-z0-9]+)\[([0-9,]+)\]", txt):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DT:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if n * DT[dt] >= args.min_gib * 2**30:
+            found[f"{dt}[{dims}]"] += 1
+
+    def size_of(s):
+        dt = s.split("[")[0]
+        n = 1
+        for d in s.split("[")[1][:-1].split(","):
+            n *= int(d)
+        return n * DT[dt]
+
+    for sh, cnt in sorted(found.items(), key=lambda kv: -size_of(kv[0]))[
+            :args.top]:
+        print(f"{size_of(sh)/2**30:9.2f} GiB x{cnt:4d}  {sh}")
+
+    if args.grep:
+        for line in txt.splitlines():
+            if args.grep in line and "=" in line:
+                print(line.strip()[:300])
+
+
+if __name__ == "__main__":
+    main()

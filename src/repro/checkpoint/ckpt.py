@@ -1,0 +1,68 @@
+"""Pytree checkpointing on npz (no external deps). Keys are '/'-joined tree
+paths; dtypes/shapes round-trip exactly. Good enough for the paper-scale
+experiments and the example drivers; a real deployment would swap in
+tensorstore — the call sites wouldn't change."""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+PyTree = Any
+
+# npz can't round-trip ml_dtypes (bfloat16 etc.) — store as a uint view +
+# dtype tag and restore on load
+_EXOTIC = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+           "float8_e5m2": np.uint8}
+
+
+def _flatten(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name in _EXOTIC:
+            out["__dtype__/" + key] = np.str_(arr.dtype.name)
+            arr = arr.view(_EXOTIC[arr.dtype.name])
+        out[key] = arr
+    return out, treedef
+
+
+def save_checkpoint(path: str, tree: PyTree, step: int = 0) -> None:
+    arrays, _ = _flatten(tree)
+    arrays["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, **arrays)
+        os.replace(tmp, path)          # atomic
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def load_checkpoint(path: str, like: PyTree):
+    """Restore into the structure of ``like``. Returns (tree, step)."""
+    with np.load(path) as data:
+        step = int(data["__step__"])
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, leaf in flat:
+            key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                           for q in p)
+            arr = data[key]
+            if "__dtype__/" + key in data:
+                arr = arr.view(np.dtype(str(data["__dtype__/" + key])))
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch at {key}: "
+                                 f"{arr.shape} vs {leaf.shape}")
+            leaves.append(np.asarray(arr).astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves), step

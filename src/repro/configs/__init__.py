@@ -1,0 +1,17 @@
+# one module per assigned architecture (registry side-effects)
+from repro.configs import (chatglm3_6b, deepseek_v3_671b,  # noqa: F401
+                           falcon_mamba_7b, granite_moe_3b_a800m,
+                           minicpm3_4b, musicgen_large, qwen2_vl_2b,
+                           smollm_135m, starcoder2_15b, zamba2_7b)
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, PFLConfig,
+                                ShapeConfig, SSMConfig, TrainConfig,
+                                WirelessConfig, get_config, list_archs)
+from repro.configs.paper_cnn import CNNConfig, cifar10_cnn, cifar100_cnn, mnist_cnn
+from repro.configs.shapes import SHAPES, get_shape
+
+__all__ = [
+    "MLAConfig", "ModelConfig", "MoEConfig", "PFLConfig", "ShapeConfig",
+    "SSMConfig", "TrainConfig", "WirelessConfig", "get_config", "list_archs",
+    "CNNConfig", "cifar10_cnn", "cifar100_cnn", "mnist_cnn",
+    "SHAPES", "get_shape",
+]

@@ -1,0 +1,15 @@
+"""Assigned architecture config (public-literature pool); source cited in ``source``."""
+from __future__ import annotations
+
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, SSMConfig,
+                                register)
+
+
+@register("chatglm3-6b")
+def chatglm3_6b() -> ModelConfig:
+    # RoPE applied to half the head dim ("2d" rope), GQA with 2 kv groups.
+    return ModelConfig(
+        name="chatglm3-6b", family="dense", n_layers=28, d_model=4096,
+        n_heads=32, n_kv_heads=2, d_ff=13696, vocab=65024,
+        rope="rope2d", rope_fraction=0.5,
+        source="arXiv:2406.12793")

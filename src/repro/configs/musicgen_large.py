@@ -1,0 +1,16 @@
+"""Assigned architecture config (public-literature pool); source cited in ``source``."""
+from __future__ import annotations
+
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, SSMConfig,
+                                register)
+
+
+@register("musicgen-large")
+def musicgen_large() -> ModelConfig:
+    # Decoder-only over EnCodec tokens; text-conditioning frames arrive as a
+    # precomputed-embedding prefix (stub frontend).
+    return ModelConfig(
+        name="musicgen-large", family="audio", n_layers=48, d_model=2048,
+        n_heads=32, n_kv_heads=32, d_ff=8192, vocab=2048,
+        rope="none", n_stub_tokens=64,
+        source="arXiv:2306.05284")

@@ -1,0 +1,16 @@
+"""Assigned architecture config (public-literature pool); source cited in ``source``."""
+from __future__ import annotations
+
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, SSMConfig,
+                                register)
+
+
+@register("qwen2-vl-2b")
+def qwen2_vl_2b() -> ModelConfig:
+    # M-RoPE + dynamic resolution backbone; vision encoder is a stub that
+    # supplies precomputed patch embeddings (DESIGN.md carve-out).
+    return ModelConfig(
+        name="qwen2-vl-2b", family="vlm", n_layers=28, d_model=1536,
+        n_heads=12, n_kv_heads=2, d_ff=8960, vocab=151936,
+        rope="mrope", rope_theta=1e6, n_stub_tokens=256, qkv_bias=True,
+        source="arXiv:2409.12191")

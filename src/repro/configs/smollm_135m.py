@@ -1,0 +1,13 @@
+"""Assigned architecture config (public-literature pool); source cited in ``source``."""
+from __future__ import annotations
+
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, SSMConfig,
+                                register)
+
+
+@register("smollm-135m")
+def smollm_135m() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-135m", family="dense", n_layers=30, d_model=576,
+        n_heads=9, n_kv_heads=3, d_ff=1536, vocab=49152,
+        source="hf:HuggingFaceTB/SmolLM-135M")

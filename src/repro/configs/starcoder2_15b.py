@@ -1,0 +1,15 @@
+"""Assigned architecture config (public-literature pool); source cited in ``source``."""
+from __future__ import annotations
+
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, SSMConfig,
+                                register)
+
+
+@register("starcoder2-15b")
+def starcoder2_15b() -> ModelConfig:
+    # Native sliding-window 4096 attention.
+    return ModelConfig(
+        name="starcoder2-15b", family="dense", n_layers=40, d_model=6144,
+        n_heads=48, n_kv_heads=4, d_ff=24576, vocab=49152,
+        sliding_window=4096,
+        source="arXiv:2402.19173")

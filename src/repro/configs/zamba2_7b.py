@@ -1,0 +1,18 @@
+"""Assigned architecture config (public-literature pool); source cited in ``source``."""
+from __future__ import annotations
+
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, SSMConfig,
+                                register)
+
+
+@register("zamba2-7b")
+def zamba2_7b() -> ModelConfig:
+    # Mamba2 backbone with a single shared attention(+MLP) block applied
+    # periodically (here: every 6 mamba layers), per Zamba2.
+    return ModelConfig(
+        name="zamba2-7b", family="hybrid", n_layers=81, d_model=3584,
+        n_heads=32, n_kv_heads=32, d_ff=14336, vocab=32000,
+        hybrid_attn_every=6,
+        ssm=SSMConfig(state_dim=64, conv_dim=4, expand=2, version=2,
+                      head_dim=64, n_groups=1),
+        source="arXiv:2411.15242")

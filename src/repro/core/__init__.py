@@ -1,0 +1,6 @@
+from repro.core import aggregation, baselines, em, selection, wireless
+from repro.core.fedsim import FederatedSimulation, FedSimConfig
+from repro.core.pfedwn import ModelFns, pfedwn_round
+
+__all__ = ["aggregation", "baselines", "em", "selection", "wireless",
+           "FederatedSimulation", "FedSimConfig", "ModelFns", "pfedwn_round"]

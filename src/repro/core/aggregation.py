@@ -1,0 +1,91 @@
+"""Model aggregation (paper Eq 1) at two scales.
+
+Simulation scale: ``mix_params`` — α·ω_n + (1−α)·Σ_m π_m·ω_m on stacked
+neighbor pytrees (used by the N-client federated simulator).
+
+Production scale: ``pod_mix`` — the same equation as a pod-axis collective
+inside a partial-manual ``shard_map``: every pod is an FL client; models are
+exchanged with one ``all_gather`` over "pod" (the D2D over-the-air exchange)
+and mixed with that client's π row, gated by the per-round link-success
+mask (the wireless erasure model). Failed links renormalize π over the
+surviving neighbors (an erased packet simply never arrives).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def mix_params(own: PyTree, neighbors_stacked: PyTree, pi: jax.Array,
+               alpha: float | jax.Array) -> PyTree:
+    """Eq (1). neighbors_stacked: leading M axis; pi: (M,) on the simplex."""
+    def mix(o, ns):
+        w = pi.astype(jnp.float32)
+        mixed = jnp.tensordot(w, ns.astype(jnp.float32), axes=1)
+        return (alpha * o.astype(jnp.float32)
+                + (1 - alpha) * mixed).astype(o.dtype)
+
+    return jax.tree.map(mix, own, neighbors_stacked)
+
+
+def masked_pi(pi: jax.Array, link_ok: jax.Array) -> jax.Array:
+    """Zero out erased links and renormalize; if every link failed, fall
+    back to pure local (all-zero row — caller keeps α·own only)."""
+    w = pi * link_ok.astype(pi.dtype)
+    total = jnp.sum(w)
+    return jnp.where(total > 0, w / jnp.maximum(total, 1e-30), w)
+
+
+def mix_params_with_erasures(own: PyTree, neighbors_stacked: PyTree,
+                             pi: jax.Array, alpha, link_ok: jax.Array
+                             ) -> PyTree:
+    """Eq (1) under per-round Bernoulli link erasures. When all links fail
+    the client keeps its local model (α + (1-α)·own)."""
+    w = masked_pi(pi, link_ok)
+    any_ok = jnp.any(link_ok)
+
+    def mix(o, ns):
+        mixed = jnp.tensordot(w.astype(jnp.float32),
+                              ns.astype(jnp.float32), axes=1)
+        out = (alpha * o.astype(jnp.float32) + (1 - alpha) * mixed)
+        keep = o.astype(jnp.float32)
+        return jnp.where(any_ok, out, keep).astype(o.dtype)
+
+    return jax.tree.map(mix, own, neighbors_stacked)
+
+
+# -------------------------------------------------- production (pod axis)
+
+def pod_mix(params: PyTree, pi_matrix: jax.Array, alpha,
+            link_ok: jax.Array | None = None,
+            axis_name: str = "pod") -> PyTree:
+    """Pod-axis Eq (1) inside shard_map (manual over ``axis_name``).
+
+    params: this pod's client params, with the sliced client axis of size 1
+    leading every leaf (shard_map keeps the dim). pi_matrix: (C, C) full
+    collaboration matrix (row n = client n's weights over all clients;
+    diagonal ignored — the self term is the α blend). link_ok: (C, C) bool
+    per-round link successes.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    C = pi_matrix.shape[0]
+    row = pi_matrix[idx]
+    row = row * (1 - jax.nn.one_hot(idx, C, dtype=row.dtype))  # no self term
+    if link_ok is not None:
+        row = row * link_ok[idx].astype(row.dtype)
+    total = jnp.sum(row)
+    row_n = jnp.where(total > 0, row / jnp.maximum(total, 1e-30), row)
+    any_ok = total > 0
+
+    def mix(p):
+        allp = jax.lax.all_gather(p, axis_name, axis=0, tiled=True)  # (C,...)
+        mixed = jnp.tensordot(row_n.astype(jnp.float32),
+                              allp.astype(jnp.float32), axes=1)[None]
+        out = alpha * p.astype(jnp.float32) + (1 - alpha) * mixed
+        return jnp.where(any_ok, out, p.astype(jnp.float32)).astype(p.dtype)
+
+    return jax.tree.map(mix, params)

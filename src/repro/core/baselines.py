@@ -1,0 +1,93 @@
+"""FL/PFL baselines compared in the paper (Sec V-A): FedAvg, FedProx,
+Per-FedAvg (first-order MAML), FedAMP, and Local. All operate on stacked
+client params (N, ...) so the simulator can vmap them."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def fedavg_aggregate(params_stacked: PyTree, sizes: jax.Array,
+                     participant_mask: jax.Array) -> PyTree:
+    """Size-weighted average over participating clients -> global model."""
+    w = sizes.astype(jnp.float32) * participant_mask.astype(jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-30)
+
+    def agg(p):
+        return jnp.tensordot(w, p.astype(jnp.float32), axes=1).astype(p.dtype)
+
+    return jax.tree.map(agg, params_stacked)
+
+
+def broadcast_global(global_params: PyTree, params_stacked: PyTree,
+                     participant_mask: jax.Array) -> PyTree:
+    """Participants adopt the global model; others keep their own."""
+    def bc(g, p):
+        m = participant_mask.reshape((-1,) + (1,) * (p.ndim - 1))
+        return jnp.where(m, g[None].astype(p.dtype), p)
+
+    return jax.tree.map(bc, global_params, params_stacked)
+
+
+def prox_term(params: PyTree, anchor: PyTree, mu: float) -> jax.Array:
+    """FedProx: (μ/2)·||w − w_global||²."""
+    sq = sum(jnp.sum(jnp.square(p.astype(jnp.float32)
+                                - a.astype(jnp.float32)))
+             for p, a in zip(jax.tree.leaves(params), jax.tree.leaves(anchor)))
+    return 0.5 * mu * sq
+
+
+def perfedavg_step(loss_fn: Callable, params: PyTree, x1, y1, x2, y2,
+                   inner_lr: float, outer_lr: float) -> PyTree:
+    """First-order Per-FedAvg (MAML) step: w ← w − β ∇f_{D₂}(w − α ∇f_{D₁}(w))."""
+    g1 = jax.grad(loss_fn)(params, x1, y1)
+    adapted = jax.tree.map(lambda p, g: p - inner_lr * g, params, g1)
+    g2 = jax.grad(loss_fn)(adapted, x2, y2)
+    return jax.tree.map(lambda p, g: p - outer_lr * g, params, g2)
+
+
+def maml_adapt(loss_fn: Callable, params: PyTree, x, y,
+               inner_lr: float) -> PyTree:
+    """Personalization at evaluation time: one adaptation step."""
+    g = jax.grad(loss_fn)(params, x, y)
+    return jax.tree.map(lambda p, gg: p - inner_lr * gg, params, g)
+
+
+def fedamp_weights(params_stacked: PyTree, sigma: float,
+                   participant_mask: jax.Array,
+                   self_weight: float = 0.5) -> jax.Array:
+    """FedAMP attention: ξ_nm ∝ exp(−||w_n − w_m||²/σ) for m ≠ n among
+    participants; ξ_nn = self_weight, off-diagonal mass = 1 − self_weight.
+    Returns (N, N) row-stochastic collaboration matrix."""
+    flat = []
+    for p in jax.tree.leaves(params_stacked):
+        flat.append(p.reshape(p.shape[0], -1).astype(jnp.float32))
+    W = jnp.concatenate(flat, axis=1)                    # (N, P)
+    sq = jnp.sum(W * W, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2 * W @ W.T
+    d2 = jnp.maximum(d2, 0.0)
+    logits = -d2 / jnp.maximum(sigma, 1e-12)
+    N = W.shape[0]
+    eye = jnp.eye(N, dtype=bool)
+    pm = participant_mask.astype(bool)
+    valid = pm[None, :] & pm[:, None] & ~eye
+    logits = jnp.where(valid, logits, -jnp.inf)
+    off = jax.nn.softmax(logits, axis=1)
+    off = jnp.where(jnp.isnan(off), 0.0, off)
+    xi = self_weight * jnp.eye(N) + (1 - self_weight) * off
+    # non-participants keep themselves
+    xi = jnp.where(pm[:, None], xi, jnp.eye(N))
+    return xi
+
+
+def fedamp_cloud_models(params_stacked: PyTree, xi: jax.Array) -> PyTree:
+    """u_n = Σ_m ξ_nm w_m."""
+    def agg(p):
+        return jnp.einsum("nm,m...->n...", xi.astype(jnp.float32),
+                          p.astype(jnp.float32)).astype(p.dtype)
+
+    return jax.tree.map(agg, params_stacked)

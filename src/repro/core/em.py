@@ -1,0 +1,63 @@
+"""EM-based PFL weight assignment (Sec IV-B, Appendix B; Eq 9-11).
+
+The target client's data distribution is modeled as a mixture over its
+selected neighbors' distributions with weights π ∈ Δ^M. Given per-sample
+losses of each neighbor's model on the target's data,
+
+  E-step:  λ_im ∝ π_m · exp(-ℓ(h_{ω_m}(x_i), y_i))          (Eq 9)
+  M-step:  π_m = (1/k_n) Σ_i λ_im                            (Eq 10)
+           ω_m ← argmin Σ_i λ_im ℓ(h_ω(x_i), y_i)            (Eq 11)
+
+``posterior``/``update_pi`` are the pure algebra; ``em_weights`` iterates
+them to a fixed point for fixed component losses; ``weighted_loss`` is the
+Eq (11) objective used by the round engine's component update.
+All numerics run in log-space (no exp underflow for large losses).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def posterior(pi: jax.Array, losses: jax.Array,
+              min_weight: float = 0.0) -> jax.Array:
+    """E-step. pi: (M,); losses: (n, M) per-sample per-component loss.
+    Returns λ: (n, M), rows on the simplex."""
+    logit = jnp.log(jnp.maximum(pi, 1e-30))[None, :] - losses
+    lam = jax.nn.softmax(logit, axis=-1)
+    if min_weight:
+        lam = jnp.maximum(lam, min_weight)
+        lam = lam / jnp.sum(lam, axis=-1, keepdims=True)
+    return lam
+
+
+def update_pi(lam: jax.Array) -> jax.Array:
+    """M-step for the mixture weights (Eq 10)."""
+    pi = jnp.mean(lam, axis=0)
+    return pi / jnp.maximum(jnp.sum(pi), 1e-30)
+
+
+def em_weights(pi0: jax.Array, losses: jax.Array, *, iters: int = 10,
+               min_weight: float = 1e-8) -> Tuple[jax.Array, jax.Array]:
+    """Iterate E/M for fixed per-component losses. Returns (π*, λ*)."""
+    def step(pi, _):
+        lam = posterior(pi, losses, min_weight)
+        return update_pi(lam), None
+
+    pi, _ = jax.lax.scan(step, pi0, None, length=iters)
+    return pi, posterior(pi, losses, min_weight)
+
+
+def mixture_log_likelihood(pi: jax.Array, losses: jax.Array) -> jax.Array:
+    """Σ_i log Σ_m π_m exp(-ℓ_im) — the EM objective (monotone under E/M;
+    asserted by the property tests)."""
+    logit = jnp.log(jnp.maximum(pi, 1e-30))[None, :] - losses
+    return jnp.sum(jax.nn.logsumexp(logit, axis=-1))
+
+
+def weighted_loss(per_sample_losses: jax.Array, lam_m: jax.Array) -> jax.Array:
+    """Eq (11) objective for one component: Σ_i λ_im ℓ_i (normalized)."""
+    return jnp.sum(lam_m * per_sample_losses) / jnp.maximum(jnp.sum(lam_m),
+                                                            1e-30)

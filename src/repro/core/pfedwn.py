@@ -1,0 +1,100 @@
+"""pFedWN round engine (Algorithm 2), target-client view.
+
+Per communication round t:
+  1. every participant runs E local SGD epochs (done by the caller/simulator),
+  2. selected neighbors transmit ω_m over their D2D links — each packet is
+     erased w.p. P_err(m) (the wireless layer's verdict),
+  3. the target runs EM (Eq 9-11) on its own data to refresh π,
+  4. aggregation: ω_n ← α ω_n + (1-α) Σ_m π*_m ω_m   (Eq 1),
+  5. the target trains locally from the aggregated model (Eq 2).
+
+The engine is model-agnostic: it needs only per-sample losses and a local
+training callable, so the same code drives the paper's CNNs and the
+transformer examples.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PFLConfig
+from repro.core import aggregation, em
+from repro.core.selection import link_success_mask
+
+PyTree = Any
+
+
+class ModelFns(NamedTuple):
+    """Pure model functions over a params pytree."""
+    per_sample_loss: Callable[[PyTree, jax.Array, jax.Array], jax.Array]
+    loss: Callable[[PyTree, jax.Array, jax.Array], jax.Array]
+    accuracy: Callable[[PyTree, jax.Array, jax.Array], jax.Array]
+
+
+def component_losses(fns: ModelFns, components: PyTree, x: jax.Array,
+                     y: jax.Array) -> jax.Array:
+    """Per-sample losses of every component model on the target's data.
+    components: stacked (M, ...) pytree. Returns (n, M)."""
+    losses = jax.vmap(lambda p: fns.per_sample_loss(p, x, y))(components)
+    return losses.T                                       # (n, M)
+
+
+def refine_components(fns: ModelFns, components: PyTree, lam: jax.Array,
+                      x: jax.Array, y: jax.Array, lr: float,
+                      steps: int = 1) -> PyTree:
+    """Eq (11): λ-weighted SGD on each component (the target's local copies
+    of the neighbor models)."""
+    def one(params, lam_m):
+        def obj(p):
+            return em.weighted_loss(fns.per_sample_loss(p, x, y), lam_m)
+
+        def sgd(p, _):
+            g = jax.grad(obj)(p)
+            return jax.tree.map(lambda w, gw: w - lr * gw, p, g), None
+
+        out, _ = jax.lax.scan(sgd, params, None, length=steps)
+        return out
+
+    return jax.vmap(one)(components, lam.T)
+
+
+def pfedwn_round(key, fns: ModelFns, target_params: PyTree,
+                 neighbor_params: PyTree, pi: jax.Array,
+                 x: jax.Array, y: jax.Array, p_err: jax.Array,
+                 cfg: PFLConfig, local_train: Callable[[PyTree, jax.Array],
+                                                       PyTree],
+                 component_steps: int = 1
+                 ) -> Tuple[PyTree, jax.Array, Dict[str, jax.Array]]:
+    """One Algorithm-2 round at the target.
+
+    neighbor_params: stacked (M, ...) models as *received* this round.
+    pi: (M,) prior weights (last round's posterior). p_err: (M,).
+    Returns (new target params, π*, info)."""
+    k_erase, k_train = jax.random.split(key)
+
+    # --- EM weight assignment (Algorithm 1, bottom half) ---
+    components = neighbor_params
+
+    def em_iter(carry, _):
+        comps, pi_c = carry
+        losses = component_losses(fns, comps, x, y)       # (n, M)
+        lam = em.posterior(pi_c, losses, cfg.em_min_weight)
+        pi_new = em.update_pi(lam)
+        comps = refine_components(fns, comps, lam, x, y, cfg.lr,
+                                  component_steps) if component_steps else comps
+        return (comps, pi_new), pi_new
+
+    (components, pi_star), pi_hist = jax.lax.scan(
+        em_iter, (components, pi), None, length=cfg.em_iters)
+
+    # --- over-the-air exchange with erasures, then Eq (1) ---
+    link_ok = link_success_mask(k_erase, p_err)
+    mixed = aggregation.mix_params_with_erasures(
+        target_params, neighbor_params, pi_star, cfg.alpha, link_ok)
+
+    # --- local training from the aggregated model (Eq 2) ---
+    new_params = local_train(mixed, k_train)
+    info = {"pi": pi_star, "pi_history": pi_hist, "link_ok": link_ok}
+    return new_params, pi_star, info

@@ -1,0 +1,61 @@
+"""Channel-aware PFL neighbor selection (Algorithm 1, top half).
+
+For a target client with candidate neighbors G_n at known positions, compute
+each link's transmission error probability (the other candidates act as the
+interferer set for that session) and select neighbors with
+P_err < ε.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import WirelessConfig
+from repro.core import wireless
+
+
+class SelectionResult(NamedTuple):
+    p_err: jax.Array          # (G,) per-neighbor error probability
+    selected: jax.Array       # (G,) bool mask  (P_err < eps)
+
+
+def neighbor_error_probabilities(cfg: WirelessConfig,
+                                 target_pos: jax.Array,
+                                 neighbor_pos: jax.Array,
+                                 valid: jax.Array | None = None,
+                                 sinr_threshold=None) -> jax.Array:
+    """neighbor_pos: (G, 2). For session s (neighbor s -> target), all other
+    valid neighbors are interferers. Returns (G,) P_err (1.0 for invalid)."""
+    G = neighbor_pos.shape[0]
+    if valid is None:
+        valid = jnp.ones((G,), bool)
+    dists = jnp.sqrt(jnp.sum((neighbor_pos - target_pos[None]) ** 2, axis=-1)
+                     + 1e-12)
+
+    def one(s):
+        mask = (jnp.arange(G) != s) & valid
+        interferer_d = jnp.where(mask, dists, -1.0)
+        return wireless.error_probability(cfg, dists[s], interferer_d,
+                                          sinr_threshold)
+
+    p = jax.vmap(one)(jnp.arange(G))
+    return jnp.where(valid, p, 1.0)
+
+
+def select_neighbors(cfg: WirelessConfig, target_pos: jax.Array,
+                     neighbor_pos: jax.Array, valid: jax.Array | None = None,
+                     *, eps: float | None = None,
+                     sinr_threshold=None) -> SelectionResult:
+    eps = cfg.error_threshold if eps is None else eps
+    p = neighbor_error_probabilities(cfg, target_pos, neighbor_pos, valid,
+                                     sinr_threshold)
+    return SelectionResult(p_err=p, selected=p < eps)
+
+
+def link_success_mask(key, p_err: jax.Array) -> jax.Array:
+    """Per-round Bernoulli erasures: a selected neighbor's model update is
+    lost with probability P_err (the over-the-air semantics used by the
+    round engine and by the pod-axis production aggregation)."""
+    return jax.random.uniform(key, p_err.shape) >= p_err

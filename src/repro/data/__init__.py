@@ -1,0 +1,7 @@
+from repro.data.partition import dirichlet_partition, train_test_split
+from repro.data.synthetic import (SyntheticImageDataset, make_client_datasets,
+                                  synthetic_image_dataset, token_batch_stream)
+
+__all__ = ["dirichlet_partition", "train_test_split",
+           "SyntheticImageDataset", "make_client_datasets",
+           "synthetic_image_dataset", "token_batch_stream"]

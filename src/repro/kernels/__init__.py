@@ -1,0 +1,6 @@
+from repro.kernels import ops, ref
+from repro.kernels.em_posterior import em_posterior
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.weighted_agg import weighted_agg
+
+__all__ = ["ops", "ref", "em_posterior", "flash_attention", "weighted_agg"]

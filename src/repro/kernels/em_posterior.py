@@ -1,0 +1,101 @@
+"""Fused EM E-step Pallas kernel (TPU target, validated interpret=True).
+
+Computes λ_im ∝ π_m exp(-ℓ_m(x_i)) (paper Eq 9) directly from the component
+logits without materializing log-softmax over the vocab:
+
+    λ[t, m] = softmax_m( log π_m + logit_m[t, y_t] − logsumexp_V logit_m[t] )
+
+Grid: (token_block, vocab_block). The vocab axis is streamed through VMEM
+(BLOCK_V at a time) while fp32 scratch carries, per (token, component):
+running max, running Σexp, and the captured label logit. The final vocab
+block folds in log π and normalizes over the (small) component axis M.
+
+This is the per-round hot loop of pFedWN: every EM iteration evaluates all
+M neighbor models on the target's data; fusing CE + posterior avoids
+writing M×T×V log-probs to HBM (at M=8, T=4096, V=50k fp32 that is 6.5 GB
+saved per iteration — the kernel is strictly bandwidth-bound on logits).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_T = 128
+DEFAULT_BLOCK_V = 512
+NEG_INF = -1e30
+
+
+def _em_kernel(pi_ref, logits_ref, labels_ref, out_ref,
+               m_ref, l_ref, ll_ref, *, block_v, n_v, n_components):
+    vb = pl.program_id(1)
+
+    @pl.when(vb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+
+    logits = logits_ref[...].astype(jnp.float32)      # (M, BT, BV)
+    labels = labels_ref[...]                          # (BT,)
+
+    # streaming logsumexp over the vocab axis
+    m_prev, l_prev = m_ref[...], l_ref[...]           # (BT, M)
+    blk_max = jnp.transpose(jnp.max(logits, axis=2))  # (BT, M)
+    m_new = jnp.maximum(m_prev, blk_max)
+    corr = jnp.exp(m_prev - m_new)
+    blk_sum = jnp.transpose(
+        jnp.sum(jnp.exp(logits - m_new.T[:, :, None]), axis=2))
+    l_ref[...] = l_prev * corr + blk_sum
+    m_ref[...] = m_new
+
+    # capture the label logit if it lives in this vocab block
+    cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape[1:], 1)  # (BT,BV)
+    hit = cols + vb * block_v == labels[:, None]
+    picked = jnp.sum(jnp.where(hit[None], logits, 0.0), axis=2)      # (M, BT)
+    ll_ref[...] = ll_ref[...] + jnp.transpose(picked)
+
+    @pl.when(vb == n_v - 1)
+    def _finalize():
+        log_pi = jnp.log(jnp.maximum(pi_ref[...].astype(jnp.float32), 1e-30))
+        lse = m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))
+        score = log_pi[None, :] + ll_ref[...] - lse          # (BT, M)
+        score = score - jnp.max(score, axis=1, keepdims=True)
+        e = jnp.exp(score)
+        out_ref[...] = (e / jnp.sum(e, axis=1, keepdims=True)
+                        ).astype(out_ref.dtype)
+
+
+def em_posterior(pi, logits, labels, *, block_t: int = DEFAULT_BLOCK_T,
+                 block_v: int = DEFAULT_BLOCK_V,
+                 interpret: bool = True) -> jax.Array:
+    """pi: (M,); logits: (M, T, V); labels: (T,) int32. Returns λ (T, M).
+    T % block_t == 0 and V % block_v == 0 (pad upstream; padded label rows
+    produce garbage rows the caller slices away)."""
+    M, T, V = logits.shape
+    if T % block_t or V % block_v:
+        raise ValueError("pad T/V to the block sizes upstream")
+    n_v = V // block_v
+
+    kernel = functools.partial(_em_kernel, block_v=block_v, n_v=n_v,
+                               n_components=M)
+    return pl.pallas_call(
+        kernel,
+        grid=(T // block_t, n_v),
+        in_specs=[
+            pl.BlockSpec((M,), lambda t, v: (0,)),
+            pl.BlockSpec((M, block_t, block_v), lambda t, v: (0, t, v)),
+            pl.BlockSpec((block_t,), lambda t, v: (t,)),
+        ],
+        out_specs=pl.BlockSpec((block_t, M), lambda t, v: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, M), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_t, M), jnp.float32),   # running max
+            pltpu.VMEM((block_t, M), jnp.float32),   # running Σexp
+            pltpu.VMEM((block_t, M), jnp.float32),   # label logit
+        ],
+        interpret=interpret,
+    )(pi, logits, labels)

@@ -1,0 +1,124 @@
+"""Flash attention Pallas kernel (TPU target, validated interpret=True).
+
+Grid: (batch, kv_head, q_block, kv_block) — TPU executes the last grid dim
+sequentially per core, so the kv_block loop carries the online-softmax
+state (running max m, denominator l, accumulator acc) in VMEM scratch.
+
+GQA is handled by folding the G = H/KH query-head group into the q-block
+rows: the MXU sees a (BLOCK_Q·G, Dh) × (Dh, BLOCK_K) matmul — hardware
+aligned for Dh ∈ {64, 128} and BLOCK_* multiples of 128.
+
+Causal + sliding-window masks come from absolute positions, so one kernel
+serves train (causal), prefill (causal) and the long-context SW variant.
+
+VMEM per program ≈ (BLOCK_Q·G + 2·BLOCK_K)·Dh·2B streams + fp32 scratch
+(BLOCK_Q·G × (Dh + 2)) ≈ 0.25 MB at defaults — far under the ~16 MB/core
+budget, leaving headroom for double-buffered K/V DMA.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale, causal, window, block_q, block_k, n_kv, g):
+    qb, kb = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale         # (BQ*G, Dh)
+    k = k_ref[...].astype(jnp.float32)                 # (BK, Dh)
+    v = v_ref[...].astype(jnp.float32)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_q * g, 1), 0) // g
+    q_pos = qb * block_q + rows
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    k_pos = kb * block_k + cols
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = acc_prev * corr + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(kb == n_kv - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                      ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, Dh); k/v: (B, Skv, KH, Dh); H % KH == 0.
+    Sq % block_q == 0 and Skv % block_k == 0 (pad upstream)."""
+    B, Sq, H, Dh = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    if Sq % block_q or Skv % block_k:
+        raise ValueError("pad Sq/Skv to the block sizes upstream")
+    scale = 1.0 / math.sqrt(Dh)
+    n_kv = Skv // block_k
+
+    # (B, KH, Sq*G, Dh): query-head group folded into rows
+    qf = q.reshape(B, Sq, KH, G, Dh).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, KH, Sq * G, Dh)
+    kf = k.transpose(0, 2, 1, 3)                      # (B, KH, Skv, Dh)
+    vf = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_kv=n_kv, g=G)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KH, Sq // block_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((None, None, block_q * G, Dh),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((None, None, block_k, Dh),
+                         lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((None, None, block_k, Dh),
+                         lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q * G, Dh),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, Sq * G, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * G, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q * G, 1), jnp.float32),   # denominator l
+            pltpu.VMEM((block_q * G, Dh), jnp.float32),  # accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    return out.reshape(B, KH, Sq, G, Dh).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, Sq, H, Dh)

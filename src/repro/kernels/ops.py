@@ -1,0 +1,49 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU backends the compiled kernels run natively; elsewhere (this CPU
+container, unit tests) they run in interpret mode or fall back to the
+pure-jnp oracle — same semantics either way (asserted by the kernel tests).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.em_posterior import em_posterior as _em_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.weighted_agg import weighted_agg as _agg_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "use_kernel"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    use_kernel: bool | None = None):
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use:
+        return _flash_kernel(q, k, v, causal=causal, window=window,
+                             interpret=not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def em_posterior(pi, logits, labels, *, use_kernel: bool | None = None):
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use:
+        return _em_kernel(pi, logits, labels, interpret=not _on_tpu())
+    return ref.em_posterior_ref(pi, logits, labels)
+
+
+@partial(jax.jit, static_argnames=("alpha", "use_kernel"))
+def weighted_agg(own, neighbors, pi, alpha: float, *,
+                 use_kernel: bool | None = None):
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use:
+        return _agg_kernel(own, neighbors, pi, alpha,
+                           interpret=not _on_tpu())
+    return ref.weighted_agg_ref(own, neighbors, pi, alpha)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int = 0) -> jax.Array:
+    """q: (B, Sq, H, Dh); k/v: (B, Skv, KH, Dh). Naive full-matrix attention
+    in fp32."""
+    B, Sq, H, Dh = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, Sq, KH, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(Dh)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def em_posterior_ref(pi, logits, labels) -> jax.Array:
+    """Fused E-step oracle (Eq 9).
+
+    pi: (M,); logits: (M, T, V) per-component; labels: (T,).
+    Returns λ (T, M): softmax_m [ log π_m − ℓ_m(x_i) ] where
+    ℓ_m = cross-entropy of component m on sample i."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[None, :, None], axis=-1)[..., 0]
+    score = jnp.log(jnp.maximum(pi, 1e-30))[:, None] + ll     # (M, T)
+    return jax.nn.softmax(score.T, axis=-1)                   # (T, M)
+
+
+def weighted_agg_ref(own, neighbors, pi, alpha) -> jax.Array:
+    """Eq (1) oracle. own: (P,); neighbors: (M, P); pi: (M,)."""
+    mixed = jnp.einsum("m,mp->p", pi.astype(jnp.float32),
+                       neighbors.astype(jnp.float32))
+    return (alpha * own.astype(jnp.float32)
+            + (1 - alpha) * mixed).astype(own.dtype)

@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the very first two lines, before ANY other import — jax locks
+# the device count on first init.
+
+# Multi-pod dry-run: lower + compile every (architecture × input shape) on
+# the production meshes; record memory / cost / collective analysis.
+#
+# This proves the distribution config is coherent without real hardware:
+# a sharding mismatch, compile-time OOM, or unsupported collective fails
+# here. benchmarks/roofline.py reads the JSON artifacts this writes.
+#
+# Roofline protocol: XLA's cost_analysis counts a while-loop body ONCE, so
+# the scanned full-depth compile (the fit/coherence proof) underreports
+# per-step cost. We therefore also lower two SHALLOW UNROLLED variants
+# (depth d1 = one layer period, d2 = two periods) and extrapolate:
+#     cost(L) = cost(d1) + (trips - 1) · (cost(d2) - cost(d1))
+# where trips = (L - first_k_dense) / period. All three compiles and the
+# extrapolated terms land in the JSON record.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import TrainConfig, get_config, get_shape, list_archs
+from repro.configs.shapes import SHAPES
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.hlo import collective_bytes_from_hlo
+from repro.sharding.rules import batch_spec, cache_shardings, param_shardings
+
+DEFAULT_OUT = "experiments/dryrun"
+
+
+def _safe_spec(mesh, spec, shape):
+    """Drop spec entries whose mesh axes don't divide the dim (e.g. B=1
+    decode batches can't shard over "data")."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= sizes.get(a, 1)
+        out.append(entry if shape[i] % total == 0 else None)
+    return P(*out)
+
+
+def _depth_period(cfg) -> int:
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        return cfg.hybrid_attn_every
+    return 1
+
+
+def _depth_variant(cfg, periods: int):
+    """Config with first_k_dense + periods·period layers."""
+    fk = cfg.moe.first_k_dense if cfg.moe else 0
+    p = _depth_period(cfg)
+    return dataclasses.replace(cfg, n_layers=fk + periods * p)
+
+
+def _layer_trips(cfg) -> float:
+    fk = cfg.moe.first_k_dense if cfg.moe else 0
+    return (cfg.n_layers - fk) / _depth_period(cfg)
+
+
+def lower_combo(cfg, shape, mesh, *, multi_pod: bool, unroll: bool,
+                n_clients: int = 2):
+    """Lower + compile one step for (cfg, shape) on mesh."""
+    train = TrainConfig()
+    with jax.set_mesh(mesh):
+        if shape.mode == "train":
+            specs = steps_lib.input_specs(cfg, shape)
+            aparams = steps_lib.abstract_params(cfg)
+            if multi_pod:
+                C = n_clients
+                aparams = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct((C,) + x.shape, x.dtype),
+                    aparams)
+                specs = {k: jax.ShapeDtypeStruct((C,) + v.shape, v.dtype)
+                         for k, v in specs.items()}
+                step = steps_lib.make_pfedwn_round_step(
+                    cfg, train, shape, mesh, n_clients=C)
+                pshard = param_shardings(mesh, aparams, client_axis=True)
+                bshard = {k: NamedSharding(
+                    mesh, batch_spec(k, v.ndim, client_axis=True))
+                    for k, v in specs.items()}
+                pi = jax.ShapeDtypeStruct((C, C), jnp.float32)
+                ok = jax.ShapeDtypeStruct((C, C), jnp.bool_)
+                rep = NamedSharding(mesh, P())
+                jitted = jax.jit(step,
+                                 in_shardings=(pshard, bshard, rep, rep),
+                                 out_shardings=(pshard, rep, None))
+                lowered = jitted.lower(aparams, specs, pi, ok)
+            else:
+                pshard = param_shardings(mesh, aparams)
+                step = steps_lib.make_train_step(cfg, train, shape,
+                                                 unroll=unroll,
+                                                 grad_shardings=pshard)
+                bshard = {k: NamedSharding(mesh, _safe_spec(
+                    mesh, batch_spec(k, v.ndim), v.shape))
+                    for k, v in specs.items()}
+                jitted = jax.jit(step, in_shardings=(pshard, bshard),
+                                 out_shardings=(pshard, None),
+                                 donate_argnums=(0,))
+                lowered = jitted.lower(aparams, specs)
+        elif shape.mode == "prefill":
+            specs = steps_lib.input_specs(cfg, shape)
+            aparams = steps_lib.abstract_params(cfg)
+            step = steps_lib.make_prefill_step(cfg, shape, unroll=unroll)
+            pshard = param_shardings(mesh, aparams)
+            bshard = {k: NamedSharding(mesh, _safe_spec(
+                mesh, batch_spec(k, v.ndim, pod_batch=multi_pod), v.shape))
+                for k, v in specs.items()}
+            jitted = jax.jit(step, in_shardings=(pshard, bshard))
+            lowered = jitted.lower(aparams, specs)
+        else:  # decode
+            specs = steps_lib.input_specs(cfg, shape)
+            aparams = steps_lib.abstract_params(cfg)
+            acache = steps_lib.abstract_cache(cfg, shape)
+            step = steps_lib.make_decode_step(cfg, shape, unroll=unroll)
+            pshard = param_shardings(mesh, aparams)
+            cshard = cache_shardings(mesh, acache, pod_batch=multi_pod)
+            bshard = {k: NamedSharding(mesh, _safe_spec(
+                mesh, batch_spec(k, v.ndim, pod_batch=multi_pod), v.shape))
+                for k, v in specs.items()}
+            jitted = jax.jit(step,
+                             in_shardings=(pshard, cshard, bshard),
+                             out_shardings=(None, cshard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(aparams, acache, specs)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _costs(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {"flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+            "collective_bytes": coll["total"],
+            "collectives": coll["by_kind"]}
+
+
+def run_combo(arch: str, shape_name: str, out_dir: str, *,
+              multi_pod: bool = False, skip_roofline: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tag = "multipod" if multi_pod else "pod"
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "devices": 512 if multi_pod else 256,
+           "per_device_costs": True}
+    try:
+        t0 = time.time()
+        _, compiled = lower_combo(cfg, shape, mesh, multi_pod=multi_pod,
+                                  unroll=False)
+        secs = time.time() - t0
+        mem = compiled.memory_analysis()
+        rec.update(_costs(compiled))
+        rec["compile_seconds"] = round(secs, 1)
+        rec["memory"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        }
+        rec["status"] = "ok"
+
+        if not (multi_pod or skip_roofline):
+            # shallow unrolled compiles -> extrapolated per-step costs
+            t1 = time.time()
+            _, c1 = lower_combo(_depth_variant(cfg, 1), shape, mesh,
+                                multi_pod=False, unroll=True)
+            _, c2 = lower_combo(_depth_variant(cfg, 2), shape, mesh,
+                                multi_pod=False, unroll=True)
+            d1, d2 = _costs(c1), _costs(c2)
+            trips = _layer_trips(cfg)
+            extra = {}
+            for k in ("flops", "bytes_accessed", "collective_bytes"):
+                slope = d2[k] - d1[k]
+                extra[k] = d1[k] + max(trips - 1.0, 0.0) * slope
+            rec["extrapolated"] = extra
+            rec["depth_probe"] = {"d1": d1, "d2": d2, "trips": trips,
+                                  "seconds": round(time.time() - t1, 1)}
+        print(f"[ok]   {arch} x {shape_name} ({rec['mesh']}) "
+              f"compile={rec['compile_seconds']:.0f}s "
+              f"flops/dev={rec.get('extrapolated', rec)['flops']:.3e} "
+              f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB", flush=True)
+    except Exception as e:
+        rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+        print(f"[FAIL] {arch} x {shape_name} ({rec['mesh']}): "
+              f"{type(e).__name__}: {str(e)[:300]}", flush=True)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, "dryrun needs the 512 fake devices"
+    archs = list_archs() if args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    if not (args.all or (args.arch and args.shape)):
+        ap.error("pass --all or both --arch and --shape")
+    n_ok = 0
+    total = 0
+    for a in archs:
+        for s in shapes:
+            total += 1
+            if args.all:
+                # subprocess isolation: an XLA C++ check-abort on one combo
+                # must not kill the sweep
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", a, "--shape", s, "--out", args.out]
+                if args.multi_pod:
+                    cmd.append("--multi-pod")
+                if args.skip_roofline:
+                    cmd.append("--skip-roofline")
+                r = subprocess.run(cmd, timeout=3600)
+                if r.returncode != 0:
+                    tag = "multipod" if args.multi_pod else "pod"
+                    path = os.path.join(args.out, f"{a}__{s}__{tag}.json")
+                    crashed = True
+                    if os.path.exists(path):
+                        with open(path) as f:
+                            crashed = json.load(f).get("status") != "ok"
+                    if crashed:
+                        rec = {"arch": a, "shape": s, "status": "fail",
+                               "mesh": "2x16x16" if args.multi_pod else "16x16",
+                               "devices": 512 if args.multi_pod else 256,
+                               "error": f"subprocess exit {r.returncode} "
+                                        "(XLA abort)"}
+                        with open(path, "w") as f:
+                            json.dump(rec, f, indent=1)
+                        print(f"[FAIL] {a} x {s}: subprocess crashed "
+                              f"({r.returncode})", flush=True)
+                        continue
+                n_ok += 1
+            else:
+                rec = run_combo(a, s, args.out, multi_pod=args.multi_pod,
+                                skip_roofline=args.skip_roofline)
+                n_ok += rec["status"] == "ok"
+    print(f"== {n_ok}/{total} combos compiled on "
+          f"{'2x16x16' if args.multi_pod else '16x16'} ==")
+    if n_ok != total:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Production meshes. A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) ("data", "model") — 256 chips (v5e pod).
+    Multi-pod:  (2, 16, 16) ("pod", "data", "model") — 512 chips; the
+    "pod" axis doubles as the pFedWN FL-client axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """Small mesh for CI on 8 host devices."""
+    shape = (2, 2, 2) if multi_pod else (2, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,272 @@
+"""Step functions + abstract input specs for the launcher and dry-run.
+
+  - ``train_step``: one local SGD step (forward, backward, update). Under
+    pjit, gradients sync over the "data" axis only — FL clients never share
+    gradients (paper: models are exchanged, not gradients).
+  - ``prefill_step`` / ``decode_step``: serving paths.
+  - ``pfedwn_round_step``: the multi-pod production round — a partial-manual
+    shard_map over the "pod" (= FL client) axis: local step, model exchange
+    (all_gather over "pod" = the D2D over-the-air hop), EM weight refresh on
+    a probe slice (Eq 9-10), and the Eq (1) π-mix gated by the wireless
+    link mask.
+
+``input_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable, no
+allocation) for every model input of an (arch × shape) combination.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core import em
+from repro.models import model as model_lib
+from repro.utils.shardutil import logical_shard, manual_pod_context
+
+PyTree = Any
+
+
+def effective_window(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Sliding-window substitution for long-context decode on attention
+    archs without a native sub-quadratic path (DESIGN.md §Arch-applicability)."""
+    if shape.force_sliding_window and cfg.family != "ssm":
+        return cfg.sliding_window or shape.force_sliding_window
+    return cfg.sliding_window
+
+
+def _batch_dims(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[int, int]:
+    return shape.global_batch, shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input."""
+    B, S = _batch_dims(cfg, shape)
+    sds = jax.ShapeDtypeStruct
+    if shape.mode == "train":
+        specs = {"tokens": sds((B, S), jnp.int32),
+                 "labels": sds((B, S), jnp.int32)}
+        s_eff = S + cfg.n_stub_tokens
+        if cfg.n_stub_tokens:
+            specs["stub_embeds"] = sds((B, cfg.n_stub_tokens, cfg.d_model),
+                                       dtype)
+        if cfg.rope == "mrope":
+            specs["positions"] = sds((s_eff, 3), jnp.int32)
+        return specs
+    if shape.mode == "prefill":
+        specs = {"tokens": sds((B, S), jnp.int32)}
+        s_eff = S + cfg.n_stub_tokens
+        if cfg.n_stub_tokens:
+            specs["stub_embeds"] = sds((B, cfg.n_stub_tokens, cfg.d_model),
+                                       dtype)
+        if cfg.rope == "mrope":
+            specs["positions"] = sds((s_eff, 3), jnp.int32)
+        return specs
+    # decode: ONE new token against a seq_len cache
+    return {"token": sds((B, 1), jnp.int32),
+            "pos": sds((), jnp.int32)}
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16) -> PyTree:
+    return jax.eval_shape(
+        lambda k: model_lib.init_params(k, cfg, dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig,
+                   dtype=jnp.bfloat16) -> PyTree:
+    window = effective_window(cfg, shape)
+    return jax.eval_shape(
+        functools.partial(model_lib.init_cache, cfg, shape.global_batch,
+                          shape.seq_len, window=window, dtype=dtype))
+
+
+# ------------------------------------------------------------------- steps
+
+def make_train_step(cfg: ModelConfig, train: TrainConfig,
+                    shape: ShapeConfig, *, unroll: bool = False,
+                    grad_shardings: PyTree = None) -> Callable:
+    window = effective_window(cfg, shape)
+    lr = train.lr
+
+    def train_step(params: PyTree, batch: Dict) -> Tuple[PyTree, Dict]:
+        def obj(p):
+            loss, metrics = model_lib.loss_fn(p, cfg, batch, window=window,
+                                              remat=train.remat,
+                                              unroll=unroll)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(obj, has_aux=True)(params)
+        if grad_shardings is not None:
+            # pin gradient layouts to the parameter layouts — without this
+            # XLA may keep replicated expert-gradient intermediates alive
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        # update in param dtype: upcasting to fp32 materializes full fp32
+        # copies of the stacked expert params+grads (~19 GiB/device at
+        # deepseek scale). bf16 SGD matches the paper's plain-SGD setting;
+        # a production fp32-master-weight option would shard the masters.
+        new_params = jax.tree.map(
+            lambda p, g: p - jnp.asarray(lr, p.dtype) * g.astype(p.dtype),
+            params, grads)
+        metrics = dict(metrics, loss=loss)
+        return new_params, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig, *,
+                      unroll: bool = False) -> Callable:
+    window = effective_window(cfg, shape)
+
+    def prefill_step(params: PyTree, batch: Dict):
+        return model_lib.prefill(params, cfg, batch["tokens"],
+                                 stub_embeds=batch.get("stub_embeds"),
+                                 positions=batch.get("positions"),
+                                 window=window, unroll=unroll)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, shape: ShapeConfig, *,
+                     unroll: bool = False) -> Callable:
+    window = effective_window(cfg, shape)
+
+    def decode_step(params: PyTree, cache: PyTree, batch: Dict):
+        return model_lib.decode(params, cfg, batch["token"], cache,
+                                batch["pos"], window=window, unroll=unroll)
+
+    return decode_step
+
+
+# ------------------------------------------------- multi-pod pFedWN round
+
+def _per_sequence_loss(params, cfg, tokens, labels, window):
+    """(B,) mean CE per sequence — the EM per-sample loss at LM scale
+    (a 'sample' is one sequence; Eq 8's ℓ)."""
+    h, _ = model_lib.forward_hidden(params, cfg, tokens, window=window,
+                                    remat=False)
+    logits = model_lib.logits_from_hidden(params, cfg, h)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    ll = jnp.sum(jnp.where(vocab_iota == safe[..., None], logits, 0.0),
+                 axis=-1)
+    per_tok = (lse - ll) * mask
+    return jnp.sum(per_tok, axis=1) / jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+
+
+def make_pfedwn_round_step(cfg: ModelConfig, train: TrainConfig,
+                           shape: ShapeConfig, mesh, *,
+                           n_clients: int, alpha: float = 0.5,
+                           em_iters: int = 3, probe_sequences: int = 4,
+                           probe_tokens: int = 512,
+                           exchange_bits: int = 16) -> Callable:
+    """Multi-pod production round (lowered by the multi-pod dry-run).
+
+    Signature of the returned fn:
+      (params, batch, pi_matrix (C,C), link_ok (C,C) bool)
+        -> (params, pi_matrix, metrics)
+    where params carry a leading client axis of size n_clients sharded over
+    "pod"; batch tensors likewise.
+    """
+    window = effective_window(cfg, shape)
+    # NOTE: no grad sharding constraints here — with_sharding_constraint on
+    # the grads tree inside the partial-manual shard_map trips the same XLA
+    # partition-group check that forces the MoE G=1 fallback (DESIGN.md
+    # workaround list); the pod-local memory accounting is therefore looser
+    # than the single-pod step's.
+    base_step = make_train_step(cfg, train, shape)
+    C = n_clients
+
+    def _body(params, batch, pi_matrix, link_ok):
+        # shard_map keeps the sliced pod dim: strip the leading 1
+        params_l = jax.tree.map(lambda p: p[0], params)
+        batch_l = jax.tree.map(
+            lambda b: b[0] if b.ndim and b.shape[0] == 1 else b, batch)
+
+        # ---- 1. local SGD step (grad sync over "data" only) ----
+        params_l, metrics = base_step(params_l, batch_l)
+
+        # ---- 2. D2D model exchange: all_gather over the pod axis ----
+        # beyond-paper option: int8 symmetric per-tensor quantization of
+        # the exchanged models (2x less D2D traffic vs bf16; the paper
+        # assumes full-precision exchange). EM/mix run on dequantized
+        # values, so only the over-the-air representation changes.
+        if exchange_bits == 8:
+            def xchg(p):
+                scale = jnp.maximum(jnp.max(jnp.abs(p.astype(jnp.float32))),
+                                    1e-12) / 127.0
+                q = jnp.clip(jnp.round(p.astype(jnp.float32) / scale),
+                             -127, 127).astype(jnp.int8)
+                qg = jax.lax.all_gather(q, "pod", axis=0, tiled=False)
+                sg = jax.lax.all_gather(scale, "pod", axis=0, tiled=False)
+                return (qg.astype(p.dtype)
+                        * sg.reshape((-1,) + (1,) * p.ndim).astype(p.dtype))
+
+            gathered = jax.tree.map(xchg, params_l)
+        else:
+            gathered = jax.tree.map(
+                lambda p: jax.lax.all_gather(p, "pod", axis=0, tiled=False),
+                params_l)
+
+        # ---- 3. EM weight refresh on a probe slice (Eq 9-10) ----
+        probe_tok = batch_l["tokens"][:probe_sequences, :probe_tokens]
+        probe_lbl = batch_l["labels"][:probe_sequences, :probe_tokens]
+        losses = jax.vmap(
+            lambda p: _per_sequence_loss(p, cfg, probe_tok, probe_lbl,
+                                         window))(gathered)      # (C, n)
+        losses = losses.T                                        # (n, C)
+        idx = jax.lax.axis_index("pod")
+        self_mask = jax.nn.one_hot(idx, C, dtype=losses.dtype) * 1e30
+        losses = losses + self_mask[None, :]   # exclude own model (Sec IV-B)
+        pi_row = pi_matrix[idx]
+        pi_row = jnp.where(pi_row > 0, pi_row, 1.0 / C)
+        pi_star, _ = em.em_weights(pi_row / jnp.sum(pi_row), losses,
+                                   iters=em_iters)
+
+        # ---- 4. Eq (1) aggregation gated by the wireless link mask ----
+        row_ok = link_ok[idx].astype(pi_star.dtype)
+        w = pi_star * row_ok
+        total = jnp.sum(w)
+        w = jnp.where(total > 0, w / jnp.maximum(total, 1e-30), w)
+        any_ok = total > 0
+
+        def mix(p_self, p_all):
+            mixed = jnp.tensordot(w.astype(jnp.float32),
+                                  p_all.astype(jnp.float32), axes=1)
+            out = alpha * p_self.astype(jnp.float32) + (1 - alpha) * mixed
+            return jnp.where(any_ok, out, p_self.astype(jnp.float32)
+                             ).astype(p_self.dtype)
+
+        params_l = jax.tree.map(mix, params_l, gathered)
+
+        new_pi = jax.lax.all_gather(pi_star, "pod", axis=0, tiled=False)
+        params_out = jax.tree.map(lambda p: p[None], params_l)
+        metrics = {k: jax.lax.pmean(v, "pod") for k, v in metrics.items()}
+        return params_out, new_pi, metrics
+
+    def body(*args):
+        with manual_pod_context():
+            return _body(*args)
+
+    # full-rank specs (partial-manual shard_map rejects prefix specs):
+    # every params/batch leaf carries a leading client axis sharded over
+    # "pod"; pi/link matrices and metrics are replicated.
+    aparams = abstract_params(cfg)
+    pspec = jax.tree.map(lambda x: P("pod", *([None] * x.ndim)), aparams)
+    bspec = {k: P("pod", *([None] * v.ndim))
+             for k, v in input_specs(cfg, shape).items()}
+    mspec = {k: P() for k in ("loss", "xent", "aux", "mtp")}
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(pspec, bspec, P(None, None), P(None, None)),
+        out_specs=(pspec, P(None, None), mspec),
+        axis_names={"pod"},
+        check_vma=False,
+    )

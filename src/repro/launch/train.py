@@ -1,0 +1,171 @@
+"""Training launcher.
+
+Two modes:
+  - single-client LM training on the local devices (the substrate any FL
+    client runs): ``--arch smollm-135m --steps 200``
+  - multi-client pFedWN LM round driver (``--clients N``): clients are
+    simulated on the local device set with stacked params and the Eq (1)
+    mix after every E local steps — the same math the multi-pod
+    ``pfedwn_round_step`` runs at production scale.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --steps 50 --batch 8 --seq 256
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --clients 4 --rounds 5 --local-steps 10 --batch 4 --seq 256
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import TrainConfig, get_config
+from repro.configs.base import ShapeConfig
+from repro.core import aggregation, em
+from repro.data import token_batch_stream
+from repro.models import init_params, loss_fn
+from repro.optim import make_optimizer
+
+
+def reduced_or_full(arch: str, full: bool):
+    cfg = get_config(arch)
+    return cfg if full else cfg.reduced()
+
+
+def single_client(args) -> None:
+    cfg = reduced_or_full(args.arch, args.full)
+    train = TrainConfig(lr=args.lr, optimizer=args.optimizer)
+    shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch,
+                        mode="train")
+    key = jax.random.PRNGKey(train.seed)
+    params = init_params(key, cfg, jnp.float32)
+    opt_init, opt_update = make_optimizer(train.optimizer)
+    opt_state = opt_init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        def obj(p):
+            loss, m = loss_fn(p, cfg, batch, remat=False)
+            return loss, m
+
+        (loss, metrics), grads = jax.value_and_grad(obj, has_aux=True)(params)
+        params, opt_state = opt_update(params, grads, opt_state, train.lr)
+        return params, opt_state, loss
+
+    stream = token_batch_stream(0, batch=args.batch, seq_len=args.seq,
+                                vocab=cfg.vocab)
+    t0 = time.time()
+    for i, raw in zip(range(args.steps), stream):
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        if cfg.n_stub_tokens:
+            batch["stub_embeds"] = jnp.zeros(
+                (args.batch, cfg.n_stub_tokens, cfg.d_model), jnp.float32)
+        params, opt_state, loss = step(params, opt_state, batch)
+        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(loss):.4f} "
+                  f"({(time.time()-t0):.1f}s)", flush=True)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, args.steps)
+        print("saved", args.ckpt)
+
+
+def federated(args) -> None:
+    """pFedWN rounds over N simulated LM clients (distinct data streams)."""
+    cfg = reduced_or_full(args.arch, args.full)
+    C = args.clients
+    key = jax.random.PRNGKey(0)
+    params = jax.vmap(lambda k: init_params(k, cfg, jnp.float32))(
+        jax.random.split(key, C))
+    lr = args.lr
+
+    @jax.jit
+    def local_steps(params, batches):
+        def one_client(p, bs):
+            def step(p, b):
+                g = jax.grad(lambda q: loss_fn(q, cfg, b)[0])(p)
+                return jax.tree.map(lambda w, gw: w - lr * gw, p, g), None
+
+            def scan_step(p, i):
+                b = jax.tree.map(lambda x: x[i], bs)
+                return step(p, b)
+
+            p, _ = jax.lax.scan(scan_step, p,
+                                jnp.arange(args.local_steps))
+            return p
+
+        return jax.vmap(one_client)(params, batches)
+
+    @jax.jit
+    def per_seq_losses(params, tokens, labels):
+        def one(p):
+            l, _ = loss_fn(p, cfg, {"tokens": tokens, "labels": labels})
+            return l
+        return jax.vmap(one)(params)
+
+    streams = [token_batch_stream(100 + 31 * c, batch=args.batch,
+                                  seq_len=args.seq, vocab=cfg.vocab)
+               for c in range(C)]
+    pi = jnp.full((C,), 1.0 / max(C - 1, 1))
+    p_err = jnp.asarray(args.p_err)[:C] if args.p_err else jnp.full((C,), 0.05)
+
+    for rnd in range(args.rounds):
+        batches = []
+        for c in range(C):
+            bs = [next(streams[c]) for _ in range(args.local_steps)]
+            batches.append({k: np.stack([b[k] for b in bs]) for k in bs[0]})
+        stacked = {k: jnp.asarray(np.stack([b[k] for b in batches]))
+                   for k in batches[0]}
+        params = local_steps(params, stacked)
+
+        # target client 0: EM weights over neighbors, Eq (1) mix
+        probe = next(streams[0])
+        neighbors = jax.tree.map(lambda p: p[1:], params)
+        losses = per_seq_losses(neighbors, jnp.asarray(probe["tokens"]),
+                                jnp.asarray(probe["labels"]))[None, :]
+        pi_star, _ = em.em_weights(pi[:C - 1] / jnp.sum(pi[:C - 1]), losses,
+                                   iters=3)
+        key, k1 = jax.random.split(key)
+        link_ok = jax.random.uniform(k1, (C - 1,)) >= p_err[1:]
+        target = jax.tree.map(lambda p: p[0], params)
+        mixed = aggregation.mix_params_with_erasures(
+            target, neighbors, pi_star, args.alpha, link_ok)
+        params = jax.tree.map(lambda s, t: s.at[0].set(t), params, mixed)
+        l0, _ = loss_fn(mixed, cfg, {k: jnp.asarray(v) for k, v in
+                                     next(streams[0]).items()})
+        print(f"round {rnd}: target loss {float(l0):.4f} "
+              f"pi={np.round(np.asarray(pi_star), 3)} "
+              f"links={np.asarray(link_ok).astype(int)}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (default: reduced smoke size)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="sgd")
+    ap.add_argument("--ckpt", default=None)
+    # federated mode
+    ap.add_argument("--clients", type=int, default=0)
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--local-steps", type=int, default=10)
+    ap.add_argument("--alpha", type=float, default=0.5)
+    ap.add_argument("--p-err", type=float, nargs="*", default=None)
+    args = ap.parse_args()
+    if args.clients:
+        federated(args)
+    else:
+        single_client(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models import cnn
+from repro.models.model import (decode, forward_hidden, init_cache,
+                                init_params, loss_fn, prefill)
+
+__all__ = ["cnn", "decode", "forward_hidden", "init_cache", "init_params",
+           "loss_fn", "prefill"]

@@ -1,0 +1,372 @@
+"""Attention: GQA (full / sliding-window) and MLA (deepseek/minicpm3).
+
+Long sequences never materialize the S×S score matrix: ``chunked_attention``
+is an online-softmax scan over KV blocks (the pure-JAX analogue of the
+Pallas flash kernel in ``repro.kernels.flash_attention``; ``kernels/ops.py``
+dispatches to the kernel on TPU backends).
+
+Decode paths operate on one query token against a cache:
+  - GQA full cache:     (B, S, KH, Dh) K/V, valid prefix mask
+  - GQA sliding window: ring buffer (B, W, KH, Dh), slot-position mask
+  - MLA: compressed cache (B, S, kv_lora) + (B, S, rope_dim) with weight
+    absorption (scores and context computed in latent space).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.layers import dense_init, linear, rmsnorm, rmsnorm_init
+from repro.models.rope import apply_rope
+from repro.utils.shardutil import (logical_shard, mesh_axis_sizes,
+                                   shard_heads)
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------ core attention
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      q_positions: jax.Array, kv_positions: jax.Array,
+                      causal: bool = True, window: int = 0,
+                      chunk: int = 512) -> jax.Array:
+    """Online-softmax attention over KV chunks.
+
+    q: (B, Sq, H, Dh); k/v: (B, Skv, KH, Dh) with H % KH == 0.
+    positions: int32 (Sq,), (Skv,) absolute positions (mask source).
+    Returns (B, Sq, H, Dh).
+    """
+    B, Sq, H, Dh = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    scale = 1.0 / math.sqrt(Dh)
+    # when KV heads don't divide the TP axis but query heads do, expand KV
+    # to full heads: clean head sharding beats the fragile batch-over-
+    # (data,model) fallback (GQA KV is small — the expansion is cheap, and
+    # the TPU Pallas kernel handles GQA natively anyway)
+    tp = mesh_axis_sizes().get("model", 1)
+    if tp > 1 and KH % tp != 0 and H % tp == 0:
+        rep = H // KH
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        k = logical_shard(k, ("data",), None, ("model",), None)
+        v = logical_shard(v, ("data",), None, ("model",), None)
+        KH = H
+    G = H // KH
+    qg = shard_heads(q.reshape(B, Sq, KH, G, Dh))
+
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+    kc = k.reshape(B, n_chunks, chunk, KH, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KH, Dh).transpose(1, 0, 2, 3, 4)
+    pc = kv_positions.reshape(n_chunks, chunk)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        k_blk, v_blk, p_blk = inp                      # (B,C,KH,Dh),(C,)
+        s = jnp.einsum("bqhgd,bchd->bqhgc", qg, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = p_blk[None, :] >= 0                     # (1, C) valid
+        if causal:
+            mask = mask & (p_blk[None, :] <= q_positions[:, None])
+        if window:
+            mask = mask & (p_blk[None, :] > q_positions[:, None] - window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # zero masked probs explicitly: a fully-masked block would otherwise
+        # yield exp(NEG_INF - NEG_INF) = 1
+        p = jnp.exp(s - m_new[..., None])
+        p = p * mask[None, :, None, None, :].astype(p.dtype)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgc,bchd->bqhgd", p.astype(v_blk.dtype), v_blk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    # carries must carry the same batch/head sharding as q — scan-carry
+    # shardings don't propagate from the operands, and an unconstrained
+    # carry replicates the fp32 score/accumulator tensors at FULL batch
+    m0 = shard_heads(jnp.full((B, Sq, KH, G), NEG_INF, jnp.float32))
+    l0 = shard_heads(jnp.zeros((B, Sq, KH, G), jnp.float32))
+    a0 = shard_heads(jnp.zeros((B, Sq, KH, G, Dh), jnp.float32))
+    # remat per kv-chunk: without this, scan saves the per-chunk fp32 score
+    # matrices for backward — the full S×S attention matrix (flash backward
+    # recomputes them instead)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                  (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: jax.Array) -> jax.Array:
+    """One-token attention. q: (B, 1, H, Dh); k/v: (B, S, KH, Dh);
+    mask: (B, S) or (S,) bool."""
+    B, _, H, Dh = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, KH, G, Dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if mask.ndim == 1:
+        mask = mask[None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+def ring_slot_positions(pos: jax.Array, window: int) -> jax.Array:
+    """Absolute position stored in each ring-buffer slot after writing at
+    ``pos`` (slot = pos % window); negative => never written."""
+    slots = jnp.arange(window)
+    return pos - (pos - slots) % window
+
+
+# --------------------------------------------------------------- GQA module
+
+def gqa_init(key, cfg: ModelConfig, dtype) -> Dict:
+    dh = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * dh, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * dh, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * dh, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * dh, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * dh,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * dh,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * dh,), dtype)
+    return p
+
+
+def _gqa_qkv(params: Dict, cfg: ModelConfig, x: jax.Array, positions):
+    B = x.shape[0]
+    dh = cfg.resolved_head_dim
+    q = linear(params["wq"], x, params.get("bq")).reshape(B, -1, cfg.n_heads, dh)
+    k = linear(params["wk"], x, params.get("bk")).reshape(B, -1, cfg.n_kv_heads, dh)
+    v = linear(params["wv"], x, params.get("bv")).reshape(B, -1, cfg.n_kv_heads, dh)
+    fraction = cfg.rope_fraction if cfg.rope == "rope2d" else 1.0
+    q = apply_rope(q, positions, variant=cfg.rope, theta=cfg.rope_theta,
+                   fraction=fraction)
+    k = apply_rope(k, positions, variant=cfg.rope, theta=cfg.rope_theta,
+                   fraction=fraction)
+    q, k, v = shard_heads(q), shard_heads(k), shard_heads(v)
+    return q, k, v
+
+
+def gqa_apply(params: Dict, cfg: ModelConfig, x: jax.Array, *,
+              positions: jax.Array, window: int) -> jax.Array:
+    """Full-sequence (train/prefill) self attention. positions: (S,) or
+    (S,3) for mrope (shared across batch)."""
+    pos_1d = positions[..., 0] if positions.ndim == 2 else positions
+    q, k, v = _gqa_qkv(params, cfg, x, positions)
+    out = chunked_attention(q, k, v, q_positions=pos_1d, kv_positions=pos_1d,
+                            causal=True, window=window)
+    out = out.reshape(x.shape[0], x.shape[1], -1)
+    return linear(params["wo"], out)
+
+
+def gqa_prefill(params: Dict, cfg: ModelConfig, x: jax.Array, *,
+                positions: jax.Array, window: int
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Like gqa_apply but also returns the KV cache (possibly ring-packed)."""
+    pos_1d = positions[..., 0] if positions.ndim == 2 else positions
+    q, k, v = _gqa_qkv(params, cfg, x, positions)
+    out = chunked_attention(q, k, v, q_positions=pos_1d, kv_positions=pos_1d,
+                            causal=True, window=window)
+    out = linear(params["wo"], out.reshape(x.shape[0], x.shape[1], -1))
+    if window:
+        S = k.shape[1]
+        W = min(window, S)
+        k, v = k[:, S - W:], v[:, S - W:]
+        # roll so that slot = position % window (ring-buffer invariant)
+        if W == window:
+            shift = (S - W) % window
+            k = jnp.roll(k, shift, axis=1)
+            v = jnp.roll(v, shift, axis=1)
+    return out, {"k": k, "v": v}
+
+
+def gqa_decode(params: Dict, cfg: ModelConfig, x: jax.Array, *,
+               cache: Dict[str, jax.Array], pos: jax.Array,
+               positions: jax.Array, window: int
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. cache k/v: (B, S, KH, Dh) (S = window if SW).
+    pos: scalar int32 — absolute position of the new token."""
+    B = x.shape[0]
+    dh = cfg.resolved_head_dim
+    q, k_new, v_new = _gqa_qkv(params, cfg, x, positions)
+    S = cache["k"].shape[1]
+    slot = (pos % window) if window else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    if window:
+        slot_pos = ring_slot_positions(pos, S)
+        mask = (slot_pos >= 0) & (slot_pos > pos - window)
+    else:
+        mask = jnp.arange(S) <= pos
+    out = decode_attention(q, k, v, mask)
+    out = linear(params["wo"], out.reshape(B, 1, -1))
+    return out, {"k": k, "v": v}
+
+
+# --------------------------------------------------------------- MLA module
+
+def mla_init(key, cfg: ModelConfig, dtype) -> Dict:
+    m: MLAConfig = cfg.mla
+    ks = jax.random.split(key, 6)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    p: Dict = {}
+    if m.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], cfg.d_model, m.q_lora_rank, dtype)
+        p["q_norm"] = rmsnorm_init(m.q_lora_rank, dtype)
+        p["wq_b"] = dense_init(ks[1], m.q_lora_rank, cfg.n_heads * qk_dim, dtype)
+    else:
+        p["wq"] = dense_init(ks[0], cfg.d_model, cfg.n_heads * qk_dim, dtype)
+    p["wkv_a"] = dense_init(ks[2], cfg.d_model,
+                            m.kv_lora_rank + m.qk_rope_head_dim, dtype)
+    p["kv_norm"] = rmsnorm_init(m.kv_lora_rank, dtype)
+    p["wkv_b"] = dense_init(
+        ks[3], m.kv_lora_rank,
+        cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim), dtype)
+    p["wo"] = dense_init(ks[4], cfg.n_heads * m.v_head_dim, cfg.d_model, dtype)
+    return p
+
+
+def _padded_heads(cfg: ModelConfig) -> int:
+    """Attention head count padded to a TP-axis multiple (minicpm3: 40->48
+    on a 16-way axis) so every head tensor shards cleanly — the
+    batch-over-(data,model) fallback leaks full-batch all-gathers in the
+    dW contractions of the backward."""
+    tp = mesh_axis_sizes().get("model", 1)
+    return cfg.n_heads + ((-cfg.n_heads) % tp if tp > 1 else 0)
+
+
+def _mla_q(params: Dict, cfg: ModelConfig, x: jax.Array, positions):
+    """Returns (q_nope, q_rope) with the head dim PADDED to _padded_heads
+    (dead heads are all-zero; callers slice before wo / absorption)."""
+    m = cfg.mla
+    B, S = x.shape[:2]
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    if m.q_lora_rank:
+        q = linear(params["wq_a"], x)
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        q = linear(params["wq_b"], q)
+    else:
+        q = linear(params["wq"], x)
+    q = q.reshape(B, S, cfg.n_heads, qk_dim)
+    h_pad = _padded_heads(cfg) - cfg.n_heads
+    if h_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, h_pad), (0, 0)))
+    q = shard_heads(q)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, variant="rope", theta=cfg.rope_theta)
+    return shard_heads(q_nope), shard_heads(q_rope)
+
+
+def _mla_latent_kv(params: Dict, cfg: ModelConfig, x: jax.Array, positions):
+    """Compressed KV: c_kv (B,S,r) normalized latent + k_rope (B,S,dr)."""
+    m = cfg.mla
+    ckv = linear(params["wkv_a"], x)
+    c_kv, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    c_kv = logical_shard(rmsnorm(params["kv_norm"], c_kv, cfg.norm_eps),
+                         ("data",), None, None)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, variant="rope",
+                        theta=cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_apply(params: Dict, cfg: ModelConfig, x: jax.Array, *,
+              positions: jax.Array, window: int) -> jax.Array:
+    """Train/prefill: expand per-position K/V then chunked attention.
+
+    When n_heads doesn't divide the TP axis (minicpm3: 40 on 16), heads are
+    PADDED up (40 -> 48) so every attention tensor head-shards — the
+    batch-over-(data,model) fallback leaks full-batch all-gathers in the
+    backward (dW contractions mix batch layouts). Dead heads have q=k=v=0
+    and are sliced off before wo."""
+    m = cfg.mla
+    B, S = x.shape[:2]
+    H_p = _padded_heads(cfg)
+    h_pad = H_p - cfg.n_heads
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)      # padded heads
+    c_kv, k_rope = _mla_latent_kv(params, cfg, x, positions)
+    kv = linear(params["wkv_b"], c_kv).reshape(
+        B, S, cfg.n_heads, m.qk_nope_head_dim + m.v_head_dim)
+    if h_pad:
+        kv = jnp.pad(kv, ((0, 0), (0, 0), (0, h_pad), (0, 0)))
+    kv = shard_heads(kv)
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k = shard_heads(jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H_p, m.qk_rope_head_dim))],
+        axis=-1))
+    q = shard_heads(jnp.concatenate([q_nope, q_rope], axis=-1))
+    # pad v to qk_dim so one chunked_attention call serves both
+    pad = q.shape[-1] - v.shape[-1]
+    v_p = shard_heads(jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad))))
+    out = chunked_attention(q, k, v_p, q_positions=positions,
+                            kv_positions=positions, causal=True,
+                            window=window)[..., :m.v_head_dim]
+    if h_pad:
+        out = out[:, :, :cfg.n_heads]
+    return linear(params["wo"], out.reshape(B, S, -1))
+
+
+def mla_prefill(params: Dict, cfg: ModelConfig, x: jax.Array, *,
+                positions: jax.Array, window: int):
+    out = mla_apply(params, cfg, x, positions=positions, window=window)
+    c_kv, k_rope = _mla_latent_kv(params, cfg, x, positions)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode(params: Dict, cfg: ModelConfig, x: jax.Array, *,
+               cache: Dict[str, jax.Array], pos: jax.Array,
+               positions: jax.Array, window: int):
+    """Weight-absorbed single-token MLA decode (latent-space scores)."""
+    m = cfg.mla
+    B = x.shape[0]
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)   # (B,1,H_pad,*)
+    q_nope = q_nope[:, :, :cfg.n_heads]
+    q_rope = q_rope[:, :, :cfg.n_heads]
+    c_new, kr_new = _mla_latent_kv(params, cfg, x, positions)
+    S = cache["c_kv"].shape[1]
+    slot = (pos % S) if window else pos                  # ring buffer if SW
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), slot, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), slot, axis=1)
+    wkv_b = params["wkv_b"].reshape(
+        m.kv_lora_rank, cfg.n_heads, m.qk_nope_head_dim + m.v_head_dim)
+    w_k = wkv_b[..., :m.qk_nope_head_dim]                # (r, H, dn)
+    w_v = wkv_b[..., m.qk_nope_head_dim:]                # (r, H, dv)
+    # absorb: q_nope -> latent space
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_k)    # (B,1,H,r)
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope,
+                      preferred_element_type=jnp.float32))
+    s = s / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    if window:
+        slot_pos = ring_slot_positions(pos, S)
+        mask = (slot_pos >= 0) & (slot_pos > pos - window)
+    else:
+        mask = jnp.arange(S) <= pos
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", p.astype(c_kv.dtype), c_kv)
+    out = jnp.einsum("bqhr,rhd->bqhd", ctx, w_v)         # (B,1,H,dv)
+    out = linear(params["wo"], out.reshape(B, 1, -1))
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,68 @@
+"""The paper's client model scale: a compact CNN classifier (Sec V-A uses a
+3-layer CNN for MNIST and ResNet18 for CIFAR; we use a 3-block CNN with
+residual connections — the same ballpark, pure JAX)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_cnn import CNNConfig
+
+
+def _conv_init(key, k, c_in, c_out, dtype=jnp.float32):
+    fan_in = k * k * c_in
+    return jax.random.normal(key, (k, k, c_in, c_out), dtype) / jnp.sqrt(fan_in)
+
+
+def init_params(key, cfg: CNNConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, len(cfg.widths) + 2)
+    params: Dict = {"blocks": []}
+    c_in = cfg.channels
+    for i, w in enumerate(cfg.widths):
+        params["blocks"].append({
+            "conv": _conv_init(ks[i], 3, c_in, w, dtype),
+            "bias": jnp.zeros((w,), dtype),
+        })
+        c_in = w
+    feat = cfg.image_size // (2 ** len(cfg.widths))
+    flat = feat * feat * cfg.widths[-1]
+    params["fc1"] = {
+        "w": jax.random.normal(ks[-2], (flat, cfg.hidden), dtype) / jnp.sqrt(flat),
+        "b": jnp.zeros((cfg.hidden,), dtype)}
+    params["fc2"] = {
+        "w": jax.random.normal(ks[-1], (cfg.hidden, cfg.n_classes), dtype)
+        / jnp.sqrt(cfg.hidden),
+        "b": jnp.zeros((cfg.n_classes,), dtype)}
+    return params
+
+
+def apply(params: Dict, x: jax.Array) -> jax.Array:
+    """x: (B, H, W, C) -> logits (B, n_classes)."""
+    h = x
+    for blk in params["blocks"]:
+        h = jax.lax.conv_general_dilated(
+            h, blk["conv"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jax.nn.relu(h + blk["bias"][None, None, None, :])
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def per_sample_nll(params: Dict, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Per-sample negative log-likelihood (the EM E-step loss, Eq 8)."""
+    logits = apply(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+
+
+def loss(params: Dict, x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.mean(per_sample_nll(params, x, y))
+
+
+def accuracy(params: Dict, x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(apply(params, x), axis=-1) == y).astype(jnp.float32))

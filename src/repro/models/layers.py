@@ -1,0 +1,85 @@
+"""Primitive layers: init helpers, RMSNorm, linear, SwiGLU MLP.
+
+Params are plain nested dicts; every function is
+``apply(params, cfg, x, ...)`` so the pFedWN aggregation layer can treat the
+whole model as one pytree (the paper's Eq (1) mixes the pytree elementwise).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.shardutil import logical_shard, mesh_axis_sizes
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    std = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)
+
+
+def rmsnorm_init(dim: int, dtype) -> jax.Array:
+    return jnp.ones((dim,), dtype)
+
+
+def rmsnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def linear(w: jax.Array, x: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------- SwiGLU MLP
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array) -> jax.Array:
+    # weights: (D, F) fsdp over data, tensor-parallel over model
+    gate = linear(params["w_gate"], x)
+    up = linear(params["w_up"], x)
+    h = jax.nn.silu(gate) * up
+    h = logical_shard(h, ("data",), None, ("model",))
+    return linear(params["w_down"], h)
+
+
+def embed_apply(embedding: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(embedding, tokens, axis=0)
+
+
+def unembed_apply(embedding_or_head: jax.Array, x: jax.Array,
+                  transpose: bool) -> jax.Array:
+    """Logits in fp32 (loss numerics). Vocab shards over "model" when it
+    divides; otherwise the SEQUENCE dim shards over "model" (granite's
+    vocab 49155 divides nothing — without this the fp32 logits replicate
+    16x)."""
+    w = embedding_or_head
+    if transpose:
+        logits = jnp.einsum("...d,vd->...v", x, w,
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, w,
+                            preferred_element_type=jnp.float32)
+    tp = mesh_axis_sizes().get("model", 1)
+    if tp > 1 and logits.shape[-1] % tp == 0:
+        return logical_shard(logits, ("data",), None, ("model",))
+    return logical_shard(logits, ("data",), ("model",), None)

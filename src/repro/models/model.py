@@ -1,0 +1,538 @@
+"""Model assembly for all assigned architectures.
+
+One parameter pytree per model. The layer loop runs either as
+``lax.scan`` over stacked layer params (compile time O(1) in depth — at
+61-81 layers and 512 SPMD partitions this matters) or fully unrolled
+(``unroll=True``): XLA's ``cost_analysis`` counts a while-loop body ONCE,
+so the roofline pipeline lowers shallow unrolled variants to measure true
+per-layer FLOPs/bytes/collectives and extrapolates (launch/dryrun.py).
+
+Entry points:
+  init_params(key, cfg, dtype)                          -> params
+  loss_fn(params, cfg, batch, *, window, remat, unroll) -> (loss, metrics)
+  prefill(params, cfg, tokens, *, ...)                  -> (logits, cache)
+  decode(params, cfg, token, cache, pos, *, ...)        -> (logits, cache)
+  init_cache(cfg, batch, max_len, *, window, dtype)     -> cache pytree
+
+Decode caches:
+  dense/vlm/audio/moe : {"k","v"} (L,B,S,KH,Dh) (ring buffer if windowed)
+  mla                 : {"c_kv","k_rope"} compressed latents
+  ssm                 : {"h","conv"} states
+  hybrid (zamba2)     : mamba states (L,...) + shared-attn {"k","v"} with a
+                        leading applications axis (A,...)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (dense_init, embed_apply, embed_init,
+                                 mlp_apply, mlp_init, rmsnorm, rmsnorm_init,
+                                 unembed_apply)
+from repro.utils.shardutil import logical_shard
+
+PyTree = Any
+
+
+# ------------------------------------------------------------- layer loop
+
+def _layer_loop(body, carry, stacked: PyTree, n: int, *,
+                unroll: bool, remat: bool = False):
+    """body(carry, layer, idx) -> (carry, out). idx is a python int when
+    unrolled, a traced int32 under scan. Returns (carry, stacked_outs)."""
+    if remat:
+        body = jax.checkpoint(body, static_argnums=())
+    if unroll:
+        outs = []
+        for i in range(n):
+            layer = jax.tree.map(lambda p: p[i], stacked)
+            carry, out = body(carry, layer, i)
+            outs.append(out)
+        if outs and outs[0] is not None:
+            stacked_out = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        else:
+            stacked_out = None
+        return carry, stacked_out
+
+    def sbody(c, inp):
+        layer, i = inp
+        return body(c, layer, i)
+
+    idxs = jnp.arange(n, dtype=jnp.int32)
+    return jax.lax.scan(sbody, carry, (stacked, idxs))
+
+
+def _maybe_cond(applied: Union[bool, jax.Array], true_fn, false_fn, operand):
+    if isinstance(applied, (bool, int)):
+        return true_fn(operand) if applied else false_fn(operand)
+    return jax.lax.cond(applied, true_fn, false_fn, operand)
+
+
+def _n_layers(stacked: PyTree) -> int:
+    return jax.tree.leaves(stacked)[0].shape[0]
+
+
+# ----------------------------------------------------------------- blocks
+
+def _attn_block_init(key, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+    p["attn"] = (attn.mla_init(k1, cfg, dtype) if cfg.mla
+                 else attn.gqa_init(k1, cfg, dtype))
+    return p
+
+
+def _moe_block_init(key, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "moe": moe_mod.moe_init(k2, cfg, dtype),
+    }
+    p["attn"] = (attn.mla_init(k1, cfg, dtype) if cfg.mla
+                 else attn.gqa_init(k1, cfg, dtype))
+    return p
+
+
+def _ssm_block_init(key, cfg: ModelConfig, dtype) -> Dict:
+    init = ssm_mod.mamba2_init if cfg.ssm.version == 2 else ssm_mod.mamba1_init
+    return {"ln": rmsnorm_init(cfg.d_model, dtype),
+            "mamba": init(key, cfg, dtype)}
+
+
+def _n_shared_apps(cfg: ModelConfig) -> int:
+    if not cfg.hybrid_attn_every:
+        return 0
+    return cfg.n_layers // cfg.hybrid_attn_every
+
+
+def _shared_app_index(cfg: ModelConfig, layer_idx):
+    """(applied?, application index) for hybrid layer ``layer_idx``.
+    Works for both python ints (unrolled) and traced int32 (scan)."""
+    k = cfg.hybrid_attn_every
+    applied = (layer_idx + 1) % k == 0
+    app_idx = (layer_idx + 1) // k - 1
+    return applied, app_idx
+
+
+# ----------------------------------------------------------------- params
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Dict:
+    keys = jax.random.split(key, 8)
+    params: Dict = {"embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+                    "ln_f": rmsnorm_init(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab, dtype)
+
+    def stacked(init_fn, n, key):
+        return jax.vmap(lambda k: init_fn(k, cfg, dtype))(jax.random.split(key, n))
+
+    if cfg.family == "ssm":
+        params["layers"] = stacked(_ssm_block_init, cfg.n_layers, keys[2])
+    elif cfg.family == "hybrid":
+        params["layers"] = stacked(_ssm_block_init, cfg.n_layers, keys[2])
+        params["shared_attn"] = _attn_block_init(keys[3], cfg, dtype)
+    elif cfg.family == "moe":
+        fk = cfg.moe.first_k_dense
+        if fk:
+            params["dense_layers"] = stacked(_attn_block_init, fk, keys[4])
+        params["layers"] = stacked(_moe_block_init, cfg.n_layers - fk, keys[2])
+    else:  # dense / vlm / audio
+        params["layers"] = stacked(_attn_block_init, cfg.n_layers, keys[2])
+    if cfg.mtp_depth:
+        params["mtp"] = _attn_block_init(keys[5], cfg, dtype)
+        params["mtp_ln"] = rmsnorm_init(cfg.d_model, dtype)
+    return params
+
+
+# ----------------------------------------------------------- forward (full)
+
+def _attn_block_apply(p, cfg: ModelConfig, x, *, positions, window):
+    apply = attn.mla_apply if cfg.mla else attn.gqa_apply
+    h = x + apply(p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps),
+                  positions=positions, window=window)
+    if "mlp" in p:
+        h = h + mlp_apply(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps))
+        return h, jnp.float32(0.0)
+    y, aux = moe_mod.moe_apply(p["moe"], cfg, rmsnorm(p["ln2"], h, cfg.norm_eps))
+    return h + y, aux
+
+
+def _ssm_block_apply(p, cfg: ModelConfig, x):
+    apply = (ssm_mod.mamba2_apply if cfg.ssm.version == 2
+             else ssm_mod.mamba1_apply)
+    return x + apply(p["mamba"], cfg, rmsnorm(p["ln"], x, cfg.norm_eps))
+
+
+def _positions_default(cfg: ModelConfig, s_eff: int):
+    pos = jnp.arange(s_eff, dtype=jnp.int32)
+    if cfg.rope == "mrope":
+        return jnp.stack([pos, pos, pos], axis=-1)
+    return pos
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, stub_embeds):
+    x = embed_apply(params["embed"], tokens)
+    if cfg.n_stub_tokens and stub_embeds is not None:
+        x = jnp.concatenate([stub_embeds.astype(x.dtype), x], axis=1)
+    return logical_shard(x, ("data",), None, None)
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, *, stub_embeds=None,
+                   positions=None, window: int = 0, remat: bool = False,
+                   unroll: bool = False):
+    """Full-sequence forward to final hidden states (+ moe aux)."""
+    x = _embed_inputs(params, cfg, tokens, stub_embeds)
+    s_eff = x.shape[1]
+    if positions is None:
+        positions = _positions_default(cfg, s_eff)
+    window = window or cfg.sliding_window
+
+    if cfg.family in ("ssm", "hybrid"):
+        shared = params.get("shared_attn")
+
+        def body(h, layer, idx):
+            h = _ssm_block_apply(layer, cfg, h)
+            # sequence-parallel storage of the remat-saved layer boundary
+            h = logical_shard(h, ("data",), ("model",), None)
+            if shared is not None:
+                applied, _ = _shared_app_index(cfg, idx)
+
+                def with_attn(hh):
+                    out, _ = _attn_block_apply(shared, cfg, hh,
+                                               positions=positions,
+                                               window=window)
+                    return out
+
+                h = _maybe_cond(applied, with_attn, lambda hh: hh, h)
+            return h, None
+
+        x, _ = _layer_loop(body, x, params["layers"], cfg.n_layers,
+                           unroll=unroll, remat=remat)
+        aux = jnp.float32(0.0)
+    else:
+        def body(carry, layer, idx):
+            h, aux = carry
+            h, a = _attn_block_apply(layer, cfg, h, positions=positions,
+                                     window=window)
+            # sequence-parallel storage of the remat-saved layer boundary
+            h = logical_shard(h, ("data",), ("model",), None)
+            return (h, aux + a), None
+
+        aux = jnp.float32(0.0)
+        if "dense_layers" in params:
+            (x, aux), _ = _layer_loop(body, (x, aux), params["dense_layers"],
+                                      _n_layers(params["dense_layers"]),
+                                      unroll=unroll, remat=remat)
+        (x, aux), _ = _layer_loop(body, (x, aux), params["layers"],
+                                  _n_layers(params["layers"]),
+                                  unroll=unroll, remat=remat)
+    return rmsnorm(params["ln_f"], x, cfg.norm_eps), aux
+
+
+def logits_from_hidden(params, cfg: ModelConfig, h):
+    if cfg.tie_embeddings:
+        return unembed_apply(params["embed"], h, transpose=True)
+    return unembed_apply(params["lm_head"], h, transpose=False)
+
+
+def softmax_xent(logits, labels):
+    """logits: (..., V) fp32; labels int32, negative => masked.
+    The label logit is picked with a masked sum (not take_along_axis): a
+    gather across the model-sharded vocab axis would force SPMD to
+    all-gather the full fp32 logits."""
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    ll = jnp.sum(jnp.where(vocab_iota == safe[..., None], logits, 0.0),
+                 axis=-1)
+    loss = (lse - ll) * mask
+    return jnp.sum(loss) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict, *, window: int = 0,
+            remat: bool = False, unroll: bool = False
+            ) -> Tuple[jax.Array, Dict]:
+    """batch: tokens (B,S), labels (B,S), optional stub_embeds/positions."""
+    h, aux = forward_hidden(params, cfg, batch["tokens"],
+                            stub_embeds=batch.get("stub_embeds"),
+                            positions=batch.get("positions"),
+                            window=window, remat=remat, unroll=unroll)
+    h_tok = h[:, -batch["tokens"].shape[1]:]          # drop stub positions
+    logits = logits_from_hidden(params, cfg, h_tok)
+    loss = softmax_xent(logits, batch["labels"])
+    metrics = {"xent": loss, "aux": aux}
+    if cfg.mtp_depth:
+        # multi-token prediction: one extra block predicts t+2 (rematted —
+        # it sits outside the layer scan, so without checkpoint its
+        # attention intermediates stay live through the whole backward)
+        s_eff = h.shape[1]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = _positions_default(cfg, s_eff)
+
+        def mtp_block(hh):
+            out, _ = _attn_block_apply(params["mtp"], cfg, hh,
+                                       positions=positions, window=window)
+            return out
+
+        if remat:
+            mtp_block = jax.checkpoint(mtp_block)
+        h2 = mtp_block(h)
+        h2 = rmsnorm(params["mtp_ln"], h2, cfg.norm_eps)[
+            :, -batch["tokens"].shape[1]:]
+        mtp_logits = logits_from_hidden(params, cfg, h2[:, :-1])
+        mtp_labels = batch["labels"][:, 1:]
+        mtp = softmax_xent(mtp_logits, mtp_labels)
+        metrics["mtp"] = mtp
+        loss = loss + 0.3 * mtp
+    else:
+        metrics["mtp"] = jnp.float32(0.0)
+    return loss + aux, metrics
+
+
+# ----------------------------------------------------------------- serving
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, *,
+               window: int = 0, dtype=jnp.bfloat16) -> Dict:
+    window = window or cfg.sliding_window
+    S = min(window, max_len) if window else max_len
+    dh = cfg.resolved_head_dim
+    L = cfg.n_layers
+    cache: Dict = {}
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        di = s.expand * cfg.d_model
+        if s.version == 2:
+            nh = di // s.head_dim
+            conv_ch = di + 2 * s.n_groups * s.state_dim
+            cache["ssm"] = {
+                "h": jnp.zeros((L, batch_size, nh, s.head_dim, s.state_dim),
+                               jnp.float32),
+                "conv": jnp.zeros((L, batch_size, s.conv_dim - 1, conv_ch),
+                                  dtype),
+            }
+        else:
+            cache["ssm"] = {
+                "h": jnp.zeros((L, batch_size, di, s.state_dim), jnp.float32),
+                "conv": jnp.zeros((L, batch_size, s.conv_dim - 1, di), dtype),
+            }
+        if cfg.family == "hybrid":
+            A = _n_shared_apps(cfg)
+            cache["shared_attn"] = {
+                "k": jnp.zeros((A, batch_size, S, cfg.n_kv_heads, dh), dtype),
+                "v": jnp.zeros((A, batch_size, S, cfg.n_kv_heads, dh), dtype),
+            }
+        return cache
+
+    def kv_zeros(n):
+        if cfg.mla:
+            m = cfg.mla
+            return {"c_kv": jnp.zeros((n, batch_size, S, m.kv_lora_rank), dtype),
+                    "k_rope": jnp.zeros((n, batch_size, S, m.qk_rope_head_dim),
+                                        dtype)}
+        return {"k": jnp.zeros((n, batch_size, S, cfg.n_kv_heads, dh), dtype),
+                "v": jnp.zeros((n, batch_size, S, cfg.n_kv_heads, dh), dtype)}
+
+    fk = cfg.moe.first_k_dense if cfg.moe else 0
+    if fk:
+        cache["dense_layers"] = kv_zeros(fk)
+    cache["layers"] = kv_zeros(L - fk)
+    # NOTE: no MTP cache — the MTP head is train-only (inactive at decode)
+    return cache
+
+
+def _attn_block_decode(p, cfg: ModelConfig, x, *, layer_cache, pos, positions,
+                       window):
+    dec = attn.mla_decode if cfg.mla else attn.gqa_decode
+    y, new_cache = dec(p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps),
+                       cache=layer_cache, pos=pos, positions=positions,
+                       window=window)
+    h = x + y
+    if "mlp" in p:
+        h = h + mlp_apply(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps))
+        return h, new_cache
+    y2, _ = moe_mod.moe_apply(p["moe"], cfg, rmsnorm(p["ln2"], h, cfg.norm_eps))
+    return h + y2, new_cache
+
+
+def _cache_loop(body, x, stacked_params, stacked_cache, *, unroll: bool):
+    """body((x,), (layer, cache), idx) -> (x, new_cache) pattern."""
+    n = _n_layers(stacked_params)
+    if unroll:
+        new_caches = []
+        for i in range(n):
+            layer = jax.tree.map(lambda p: p[i], stacked_params)
+            c = jax.tree.map(lambda p: p[i], stacked_cache)
+            x, nc = body(x, layer, c, i)
+            new_caches.append(nc)
+        stacked_out = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        return x, stacked_out
+
+    def sbody(carry, inp):
+        layer, c, i = inp
+        return body(carry, layer, c, i)
+
+    idxs = jnp.arange(n, dtype=jnp.int32)
+    return jax.lax.scan(sbody, x, (stacked_params, stacked_cache, idxs))
+
+
+def decode(params, cfg: ModelConfig, token, cache: Dict, pos, *,
+           window: int = 0, unroll: bool = False) -> Tuple[jax.Array, Dict]:
+    """token: (B, 1) int32; pos: scalar int32 absolute position.
+    Returns (logits (B, V) fp32, new cache)."""
+    window = window or cfg.sliding_window
+    x = embed_apply(params["embed"], token)
+    x = logical_shard(x, ("data",), None, None)
+    pos = jnp.asarray(pos, jnp.int32)
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(pos, (1, 3)).astype(jnp.int32)
+    else:
+        positions = pos[None]
+
+    if cfg.family in ("ssm", "hybrid"):
+        dec = (ssm_mod.mamba2_decode if cfg.ssm.version == 2
+               else ssm_mod.mamba1_decode)
+        shared = params.get("shared_attn")
+        shared_cache0 = cache.get("shared_attn")
+
+        def body(carry, layer, layer_cache, idx):
+            h, sc = carry
+            y, new_c = dec(layer["mamba"], cfg,
+                           rmsnorm(layer["ln"], h, cfg.norm_eps), layer_cache)
+            h = h + y
+            if shared is not None:
+                applied, app_idx = _shared_app_index(cfg, idx)
+
+                def with_attn(args):
+                    hh, scc = args
+                    lc = jax.tree.map(lambda c: c[app_idx], scc)
+                    hh2, nc = _attn_block_decode(
+                        shared, cfg, hh, layer_cache=lc, pos=pos,
+                        positions=positions, window=window)
+                    scc = jax.tree.map(
+                        lambda c, n_: jax.lax.dynamic_update_index_in_dim(
+                            c, n_.astype(c.dtype), app_idx, 0), scc, nc)
+                    return hh2, scc
+
+                h, sc = _maybe_cond(applied, with_attn, lambda a: a, (h, sc))
+            return (h, sc), new_c
+
+        (x, shared_cache), new_ssm = _cache_loop(
+            body, (x, shared_cache0), params["layers"], cache["ssm"],
+            unroll=unroll)
+        new_cache = {"ssm": new_ssm}
+        if shared_cache is not None:
+            new_cache["shared_attn"] = shared_cache
+    else:
+        def body(h, layer, layer_cache, idx):
+            return _attn_block_decode(layer, cfg, h, layer_cache=layer_cache,
+                                      pos=pos, positions=positions,
+                                      window=window)
+
+        new_cache = {}
+        if "dense_layers" in params:
+            x, new_cache["dense_layers"] = _cache_loop(
+                body, x, params["dense_layers"], cache["dense_layers"],
+                unroll=unroll)
+        x, new_cache["layers"] = _cache_loop(
+            body, x, params["layers"], cache["layers"], unroll=unroll)
+    h = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, h)[:, 0]
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, stub_embeds=None,
+            positions=None, window: int = 0, unroll: bool = False
+            ) -> Tuple[jax.Array, Dict]:
+    """Build a cache from a full prompt; returns (last-token logits, cache)."""
+    window = window or cfg.sliding_window
+    x = _embed_inputs(params, cfg, tokens, stub_embeds)
+    B, s_eff = x.shape[:2]
+    if positions is None:
+        positions = _positions_default(cfg, s_eff)
+
+    if cfg.family in ("ssm", "hybrid"):
+        pre = (ssm_mod.mamba2_prefill if cfg.ssm.version == 2
+               else ssm_mod.mamba1_prefill)
+        shared = params.get("shared_attn")
+
+        def body(carry, layer, idx):
+            h, scs = carry
+            y, c = pre(layer["mamba"], cfg,
+                       rmsnorm(layer["ln"], h, cfg.norm_eps))
+            h = h + y
+            if shared is not None:
+                applied, app_idx = _shared_app_index(cfg, idx)
+
+                def with_attn(args):
+                    hh, sc = args
+                    hn = rmsnorm(shared["ln1"], hh, cfg.norm_eps)
+                    y2, kv = attn.gqa_prefill(shared["attn"], cfg, hn,
+                                              positions=positions,
+                                              window=window)
+                    hh = hh + y2
+                    hh = hh + mlp_apply(shared["mlp"],
+                                        rmsnorm(shared["ln2"], hh,
+                                                cfg.norm_eps))
+                    sc = jax.tree.map(
+                        lambda c_, n_: jax.lax.dynamic_update_index_in_dim(
+                            c_, n_.astype(c_.dtype), app_idx, 0), sc, kv)
+                    return hh, sc
+
+                h, scs = _maybe_cond(applied, with_attn, lambda a: a,
+                                     (h, scs))
+            return (h, scs), c
+
+        if shared is None:
+            scs0 = None
+        else:
+            A = _n_shared_apps(cfg)
+            dh = cfg.resolved_head_dim
+            S_c = min(window, s_eff) if window else s_eff
+            scs0 = {"k": jnp.zeros((A, B, S_c, cfg.n_kv_heads, dh), x.dtype),
+                    "v": jnp.zeros((A, B, S_c, cfg.n_kv_heads, dh), x.dtype)}
+        (x, scs), ssm_cache = _layer_loop(body, (x, scs0), params["layers"],
+                                          cfg.n_layers, unroll=unroll)
+        cache = {"ssm": ssm_cache}
+        if shared is not None:
+            cache["shared_attn"] = scs
+    else:
+        pre = attn.mla_prefill if cfg.mla else attn.gqa_prefill
+
+        def body(h, layer, idx):
+            hn = rmsnorm(layer["ln1"], h, cfg.norm_eps)
+            y, kv = pre(layer["attn"], cfg, hn, positions=positions,
+                        window=window)
+            h = h + y
+            hn2 = rmsnorm(layer["ln2"], h, cfg.norm_eps)
+            if "mlp" in layer:
+                h = h + mlp_apply(layer["mlp"], hn2)
+            else:
+                y2, _ = moe_mod.moe_apply(layer["moe"], cfg, hn2)
+                h = h + y2
+            return h, kv
+
+        cache = {}
+        if "dense_layers" in params:
+            x, cache["dense_layers"] = _layer_loop(
+                body, x, params["dense_layers"],
+                _n_layers(params["dense_layers"]), unroll=unroll)
+        x, cache["layers"] = _layer_loop(body, x, params["layers"],
+                                         _n_layers(params["layers"]),
+                                         unroll=unroll)
+    h = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, h[:, -1:])[:, 0]
+    return logits, cache

@@ -1,0 +1,214 @@
+"""Mixture-of-Experts: top-k router + sort-based grouped-GEMM dispatch.
+
+No (T, E, C) one-hot dispatch tensor is ever built (that would be 10-100x
+the hidden state). Instead tokens are sorted by expert id, packed into an
+(E, C, D) buffer via scatter, run through a batched expert GEMM (MXU
+friendly), and combined back with the gate probabilities. Experts are
+sharded over the "model" axis (expert parallel); the pack/unpack
+gather/scatter lowers to all-to-all style collectives under SPMD.
+
+Capacity: C = ceil(top_k * T / E * capacity_factor); overflow tokens are
+dropped (standard dropping implementation) — the combine step renormalizes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import os
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import dense_init, mlp_apply, mlp_init
+from repro.utils.shardutil import (in_manual_pod, logical_shard,
+                                   mesh_axis_sizes)
+
+# debug/workaround knob: "full" | "noa2a" | "nogroups"
+_MOE_MODE = lambda: os.environ.get("REPRO_MOE_MODE", "full")
+
+
+@jax.custom_vjp
+def routed_gather(src_pad: jax.Array, idx: jax.Array,
+                  inv_idx: jax.Array) -> jax.Array:
+    """Row gather whose TRANSPOSE is also a gather.
+
+    src_pad: (N+1, D) with a trailing zero pad row; idx: (R,) in [0, N]
+    (N = pad marker); inv_idx: (N, J) in [0, R] (R = pad marker) — the exact
+    inverse routing: row n of src is read by out rows inv_idx[n, :].
+
+    XLA SPMD cannot partition the scattered row dim of the default gather
+    VJP (a data-dependent scatter-add) and replicates it — >50 GB/device at
+    MoE scale. Expressing the backward as the dual gather keeps everything
+    feature-sharded. All index maps in the MoE dispatch are bijections (plus
+    pad), so the dual is exact.
+    """
+    return src_pad.at[idx].get(mode="clip")
+
+
+def _routed_gather_fwd(src_pad, idx, inv_idx):
+    return routed_gather(src_pad, idx, inv_idx), (inv_idx, src_pad.shape)
+
+
+def _routed_gather_bwd(res, d_out):
+    inv_idx, src_shape = res
+    feat = (None, ("data", "model"))
+    d_pad = logical_shard(jnp.concatenate(
+        [d_out, jnp.zeros((1, d_out.shape[1]), d_out.dtype)], axis=0), *feat)
+    d_rows = d_pad.at[inv_idx].get(mode="clip")        # (N, J, D)
+    d_src = logical_shard(jnp.sum(d_rows, axis=1), *feat)
+    d_src_pad = jnp.concatenate(
+        [d_src, jnp.zeros((1, d_src.shape[1]), d_src.dtype)], axis=0)
+    return d_src_pad, None, None
+
+
+routed_gather.defvjp(_routed_gather_fwd, _routed_gather_bwd)
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> Dict:
+    m: MoEConfig = cfg.moe
+    ks = jax.random.split(key, 5)
+    e = m.n_experts
+    d, f = cfg.d_model, m.expert_d_ff
+    std = 1.0 / jnp.sqrt(d)
+
+    def ew(k, shape):
+        return (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": ew(ks[1], (e, d, f)),
+        "w_up": ew(ks[2], (e, d, f)),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   / jnp.sqrt(f)).astype(dtype),
+    }
+    if m.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, f * m.n_shared_experts, dtype)
+    return p
+
+
+def router_probs(router_w: jax.Array, x: jax.Array, top_k: int
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (gates (T,k) fp32 normalized, ids (T,k) int32, probs (T,E))."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, ids.astype(jnp.int32), probs
+
+
+def load_balance_loss(probs: jax.Array, ids: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style aux loss: E * <fraction routed> . <mean prob>."""
+    T = probs.shape[0]
+    counts = jnp.zeros((n_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    frac = counts / jnp.maximum(ids.size, 1)
+    mean_prob = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(frac * mean_prob)
+
+
+def moe_apply(params: Dict, cfg: ModelConfig, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    GROUP-LOCAL routing: tokens are routed within G = |data-axis| groups,
+    each with its own capacity — exactly the per-device routing a real
+    expert-parallel system performs. All index math is vmapped over the
+    group axis, so every big-D gather is a *batched* gather whose batch dim
+    shards over "data" (SPMD partitions batched gathers on the batch dim and
+    passes feature sharding through); the only cross-device reshard left is
+    the (G, E, C, D) -> expert-parallel all-to-all before the grouped GEMM.
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    gates, ids, probs = router_probs(params["router"], xt, m.top_k)
+    aux = load_balance_loss(probs, ids, m.n_experts) * m.router_aux_weight
+
+    k = m.top_k
+    dp = mesh_axis_sizes().get("data", 1)
+    # group-local routing crashes XLA's partitioner inside the manual-pod
+    # shard_map (batched-gather partition-group check) — fall back to G=1
+    use_groups = (T % dp == 0 and _MOE_MODE() != "nogroups"
+                  and not in_manual_pod())
+    G = dp if use_groups else 1
+    Tg = T // G
+    Tkg = Tg * k
+    cap = int(-(-k * Tg // m.n_experts) * m.capacity_factor)
+    cap = max(8, -(-cap // 8) * 8)                    # 8-aligned
+
+    # pad the expert axis so it divides the tensor-parallel axis (granite:
+    # E=40 on a 16-way "model" axis -> 48); dummy experts never get a slot
+    tp = mesh_axis_sizes().get("model", 1)
+    e_pad = (-m.n_experts) % tp
+    E = m.n_experts + e_pad
+
+    def pad_e(w):
+        return jnp.pad(w, ((0, e_pad),) + ((0, 0),) * (w.ndim - 1)) \
+            if e_pad else w
+
+    def route_group(ids_g):
+        """Index plan for one group. ids_g: (Tg, k) expert assignment.
+        Returns (token_table (E*cap,), slot_unsorted (Tkg,),
+        pair_table (E*cap,))."""
+        flat_ids = ids_g.reshape(Tkg)
+        order = jnp.argsort(flat_ids)                 # stable sort by expert
+        s_ids = flat_ids[order]
+        s_tok = (jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), k))[order]
+        # position within expert via exclusive-cumsum of expert counts
+        counts = jnp.zeros((m.n_experts,), jnp.int32).at[flat_ids].add(1)
+        starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                  jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+        pos = jnp.arange(Tkg, dtype=jnp.int32) - starts[s_ids]
+        keep = pos < cap
+        slot = jnp.where(keep, s_ids * cap + pos, jnp.int32(E * cap))
+        # int32 inverse tables (the ONLY scatters in the dispatch)
+        token_table = jnp.full((E * cap,), Tg, jnp.int32)
+        token_table = token_table.at[slot].set(s_tok, mode="drop")
+        slot_unsorted = jnp.zeros((Tkg,), jnp.int32).at[order].set(slot)
+        pair_table = jnp.full((E * cap,), Tkg, jnp.int32)
+        pair_table = pair_table.at[slot].set(order.astype(jnp.int32),
+                                             mode="drop")
+        return token_table, slot_unsorted, pair_table
+
+    ids_g = ids.reshape(G, Tg, k)
+    token_table, slot_unsorted, pair_table = jax.vmap(route_group)(ids_g)
+
+    # pack: batched gather of token rows into per-group expert buffers
+    xt_g = logical_shard(xt.reshape(G, Tg, D), ("data",), None, ("model",))
+    xt_pad = jnp.concatenate([xt_g, jnp.zeros((G, 1, D), xt.dtype)], axis=1)
+    xt_pad = logical_shard(xt_pad, ("data",), None, ("model",))
+    inv_pack = slot_unsorted.reshape(G, Tg, k)
+    packed = jax.vmap(routed_gather)(xt_pad, token_table, inv_pack)
+    packed = logical_shard(packed, ("data",), None, ("model",))
+    packed = packed.reshape(G, E, cap, D)
+    # expert-parallel all-to-all: groups stay on "data", experts slice over
+    # "model", features de-split — one reshard, within-axis moves only
+    if _MOE_MODE() != "noa2a":
+        packed = logical_shard(packed, ("data",), ("model",), None, None)
+
+    # grouped expert GEMM (swiglu); weights (E, D, F) are expert-parallel
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", packed,
+                               pad_e(params["w_gate"]))) \
+        * jnp.einsum("gecd,edf->gecf", packed, pad_e(params["w_up"]))
+    if _MOE_MODE() != "noa2a":
+        h = logical_shard(h, ("data",), ("model",), None, None)
+    y = jnp.einsum("gecf,efd->gecd", h, pad_e(params["w_down"]))
+    if _MOE_MODE() != "noa2a":
+        y = logical_shard(y, ("data",), ("model",), None, None)
+
+    # combine: batched gather back + gate-weighted sum over k
+    y_flat = y.reshape(G, E * cap, D)
+    y_flat = logical_shard(y_flat, ("data",), None, ("model",))
+    y_flat = jnp.concatenate([y_flat, jnp.zeros((G, 1, D), y.dtype)], axis=1)
+    y_parts = jax.vmap(routed_gather)(y_flat, slot_unsorted,
+                                      pair_table[:, :, None])
+    y_parts = logical_shard(y_parts, ("data",), None, ("model",))
+    y_parts = y_parts.reshape(G, Tg, k, D)
+    out = jnp.einsum("gtkd,gtk->gtd", y_parts,
+                     gates.reshape(G, Tg, k).astype(y_parts.dtype))
+    out = logical_shard(out, ("data",), None, ("model",)).reshape(T, D)
+
+    if m.n_shared_experts:
+        out = out + mlp_apply(params["shared"], xt)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,66 @@
+"""Rotary position embeddings: standard, partial ("rope2d", chatglm-style
+half-rotary) and M-RoPE (qwen2-vl 3-axis multimodal rope).
+
+All appliers take ``positions``:
+  - rope / rope2d: int32 (..., S)
+  - mrope:         int32 (..., S, 3)  (t, h, w components)
+and rotate ``x`` of shape (..., S, H, Dh) over the last dim.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# fraction of half-dim frequencies given to each M-RoPE section (t, h, w);
+# qwen2-vl uses [16, 24, 24] of 64 half-dims => (0.25, 0.375, 0.375).
+MROPE_SECTIONS: Tuple[float, float, float] = (0.25, 0.375, 0.375)
+
+
+def _inv_freq(rot_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+
+
+def _angles(positions: jax.Array, rot_dim: int, theta: float) -> jax.Array:
+    """(..., S) int32 -> (..., S, rot_dim/2) fp32 angles."""
+    inv = _inv_freq(rot_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def _mrope_angles(positions: jax.Array, rot_dim: int, theta: float) -> jax.Array:
+    """(..., S, 3) -> (..., S, rot_dim/2): frequency bands split between the
+    temporal/height/width position components (M-RoPE, arXiv:2409.12191)."""
+    half = rot_dim // 2
+    n_t = int(round(MROPE_SECTIONS[0] * half))
+    n_h = int(round(MROPE_SECTIONS[1] * half))
+    n_w = half - n_t - n_h
+    inv = _inv_freq(rot_dim, theta)
+    section = jnp.concatenate([
+        jnp.zeros((n_t,), jnp.int32),
+        jnp.ones((n_h,), jnp.int32),
+        jnp.full((n_w,), 2, jnp.int32),
+    ])
+    pos = positions.astype(jnp.float32)              # (..., S, 3)
+    picked = jnp.take(pos, section, axis=-1)         # (..., S, half)
+    return picked * inv
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, variant: str,
+               theta: float, fraction: float = 1.0) -> jax.Array:
+    """x: (..., S, H, Dh). Rotates the first ``fraction`` of Dh."""
+    if variant == "none":
+        return x
+    dh = x.shape[-1]
+    rot_dim = int(dh * fraction)
+    rot_dim -= rot_dim % 2
+    if variant == "mrope":
+        ang = _mrope_angles(positions, rot_dim, theta)       # (..., S, rot/2)
+    else:  # rope / rope2d share the math; rope2d == fraction 0.5
+        ang = _angles(positions, rot_dim, theta)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)         # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = jnp.split(x_rot, 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated, x_pass], axis=-1)

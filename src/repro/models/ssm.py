@@ -1,0 +1,362 @@
+"""Selective state-space layers: Mamba1 (falcon-mamba) and Mamba2/SSD
+(zamba2), TPU-adapted.
+
+The GPU reference uses a fused CUDA selective-scan; on TPU we restructure:
+  - Mamba1: chunked scan — ``lax.scan`` over sequence chunks carrying the
+    (B, Di, N) state; inside a chunk, a first-order linear recurrence via
+    ``associative_scan`` (log-depth, VPU friendly). Materializes only
+    (B, chunk, Di, N) transients instead of (B, S, Di, N).
+  - Mamba2: the SSD block decomposition (intra-chunk matmul form on the MXU
+    + inter-chunk state recurrence), per the Mamba2 paper.
+
+Decode paths carry (conv window buffer, ssm state) and cost O(1) per token
+(explicit single-step recurrence — no chunk padding).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import dense_init
+from repro.utils.shardutil import logical_shard, shard_heads
+
+CHUNK = 256
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def _conv_step(window: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Single-token depthwise conv. window: (B, K, C); w: (K, C)."""
+    return jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                      w.astype(jnp.float32)) + b.astype(jnp.float32)
+
+
+def _linear_recurrence_chunked(params, dt, Bmat, xc, h0, Cmat
+                               ) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t h_{t-1} + bx_t; emits y_t = <h_t, C_t>. Chunked
+    associative scan with BOTH the discretization (a = exp(dt*A),
+    bx = dt*B*x) and the C-projection fused into the rematted chunk step —
+    nothing (B, S, Di, N)-shaped is ever live across the scan; only the
+    16x smaller (B, S, Di) inputs/outputs are.
+
+    dt/xc: (B, S, Di); Bmat/Cmat: (B, S, N); h0: (B, Di, N).
+    Returns (y (B, S, Di), h_last)."""
+    B, S, Di = dt.shape
+    N = Bmat.shape[-1]
+    n_chunks = -(-S // CHUNK)
+    pad = n_chunks * CHUNK - S
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))    # dt=0 => a=1, bx=0
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+
+    def chunked(v):
+        return v.reshape(B, n_chunks, CHUNK, v.shape[-1]).transpose(
+            1, 0, 2, 3)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    def step(h, inp):
+        dt_b, x_b, b_b, c_b = inp                    # (B,C,Di)/(B,C,N)
+        a_blk, b_blk = _discretize(params, dt_b, b_b, x_b)
+        aa, bb = jax.lax.associative_scan(combine, (a_blk, b_blk), axis=1)
+        h_blk = aa * h[:, None] + bb
+        y_blk = jnp.einsum("bcdn,bcn->bcd", h_blk, c_b)
+        return h_blk[:, -1], y_blk
+
+    h_last, y = jax.lax.scan(jax.checkpoint(step), h0,
+                             (chunked(dt), chunked(xc), chunked(Bmat),
+                              chunked(Cmat)))
+    y = y.transpose(1, 0, 2, 3).reshape(B, n_chunks * CHUNK, Di)
+    return y[:, :S], h_last
+
+
+# ------------------------------------------------------------------- mamba1
+
+def mamba1_init(key, cfg: ModelConfig, dtype) -> Dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    ks = jax.random.split(key, 5)
+    A = jnp.broadcast_to(jnp.arange(1, s.state_dim + 1, dtype=jnp.float32),
+                         (di, s.state_dim))
+    return {
+        "w_in": dense_init(ks[0], d, 2 * di, dtype),          # x and z
+        "conv": (jax.random.normal(ks[1], (s.conv_dim, di), jnp.float32)
+                 * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_x": dense_init(ks[2], di, _dt_rank(cfg) + 2 * s.state_dim, dtype),
+        "w_dt": dense_init(ks[3], _dt_rank(cfg), di, dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(A),                                   # (Di, N) fp32
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _mamba1_ssm_inputs(params, cfg, xc):
+    """xc: conv'ed+silu'ed (B,S,Di) -> (dt, Bmat, Cmat). The (B,S,Di,N)
+    discretized (a, bx) are NOT materialized here — the chunk scan builds
+    them per chunk (16x smaller live footprint)."""
+    s = cfg.ssm
+    r = _dt_rank(cfg)
+    proj = jnp.einsum("bsd,df->bsf", xc, params["w_x"])
+    dt_raw, Bmat, Cmat = jnp.split(proj, [r, r + s.state_dim], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_raw, params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"])                                 # (B,S,Di)
+    dt = logical_shard(dt, ("data",), None, ("model",))
+    return dt, Bmat.astype(jnp.float32), Cmat.astype(jnp.float32)
+
+
+def _discretize(params, dt, Bmat, xc):
+    """(a, bx) for one chunk: dt/xc (B,C,Di); Bmat (B,C,N)."""
+    A = -jnp.exp(params["A_log"])                            # (Di, N)
+    a = jnp.exp(dt[..., None] * A[None, None])               # (B,C,Di,N)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * Bmat[:, :, None, :]
+    return a, bx
+
+
+def _mamba1_out(params, xc, z, y):
+    y = y + params["D"][None, None, :] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(z.dtype)
+    return jnp.einsum("bsd,df->bsf", y, params["w_out"])
+
+
+def mamba1_apply(params: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    return mamba1_prefill(params, cfg, x)[0]
+
+
+def mamba1_prefill(params: Dict, cfg: ModelConfig, x: jax.Array):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    B, S = x.shape[:2]
+    xz = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    xz = logical_shard(xz, ("data",), None, ("model",))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(x_in, params["conv"], params["conv_b"]))
+    dt, Bmat, Cmat = _mamba1_ssm_inputs(params, cfg, xc)
+    h0 = jnp.zeros((B, di, s.state_dim), jnp.float32)
+    y_scan, h_last = _linear_recurrence_chunked(params, dt, Bmat,
+                                                xc.astype(jnp.float32), h0,
+                                                Cmat)
+    y = _mamba1_out(params, xc, z, y_scan)
+    K = s.conv_dim
+    conv_buf = (jnp.pad(x_in, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):]
+                if K > 1 else jnp.zeros((B, 0, di), xz.dtype))
+    return y, {"h": h_last, "conv": conv_buf}
+
+
+def mamba1_decode(params: Dict, cfg: ModelConfig, x: jax.Array, cache: Dict):
+    """x: (B, 1, D). cache: h (B,Di,N), conv (B,K-1,Di). O(1) per token."""
+    s = cfg.ssm
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([cache["conv"].astype(xz.dtype), x_in], axis=1)
+    xc = jax.nn.silu(_conv_step(window[:, -s.conv_dim:], params["conv"],
+                                params["conv_b"]))[:, None].astype(xz.dtype)
+    dt, Bmat, Cmat = _mamba1_ssm_inputs(params, cfg, xc)
+    a, bx = _discretize(params, dt, Bmat, xc.astype(jnp.float32))
+    h_new = a[:, 0] * cache["h"] + bx[:, 0]
+    y_step = jnp.einsum("bdn,bn->bd", h_new, Cmat[:, 0])[:, None]
+    y = _mamba1_out(params, xc, z, y_step)
+    new_conv = window[:, 1:] if s.conv_dim > 1 else cache["conv"]
+    return y, {"h": h_new, "conv": new_conv}
+
+
+# ------------------------------------------------------------------- mamba2
+
+def mamba2_init(key, cfg: ModelConfig, dtype) -> Dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    nh = di // s.head_dim
+    ks = jax.random.split(key, 3)
+    conv_ch = di + 2 * s.n_groups * s.state_dim
+    return {
+        # projects to [x (di), z (di), B (G*N), C (G*N), dt (nh)]
+        "w_in": dense_init(ks[0], d,
+                           2 * di + 2 * s.n_groups * s.state_dim + nh, dtype),
+        "conv": (jax.random.normal(ks[1], (s.conv_dim, conv_ch), jnp.float32)
+                 * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "w_out": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _ssd_chunked(xh, a_log, b, c, h0):
+    """SSD (Mamba2) chunked form.
+
+    xh: (B,S,H,P) dt-scaled inputs; a_log: (B,S,H) log decay (<=0);
+    b, c: (B,S,G,N); h0: (B,H,P,N). Returns (y (B,S,H,P), h_last).
+    NOTE: assumes h0 feeds chunk 0 via the off-diagonal term."""
+    B, S, H, P = xh.shape
+    G, N = b.shape[2], b.shape[3]
+    n_chunks = -(-S // CHUNK)
+    pad = n_chunks * CHUNK - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    C_ = CHUNK
+    hpg = H // G
+    xc = xh.reshape(B, n_chunks, C_, H, P)
+    ac = a_log.reshape(B, n_chunks, C_, H)
+    bc = b.reshape(B, n_chunks, C_, G, N)
+    cc = c.reshape(B, n_chunks, C_, G, N)
+
+    cum = jnp.cumsum(ac, axis=2)                     # (B,nc,C,H)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Cq,Ck,H)
+    causal = jnp.tril(jnp.ones((C_, C_), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk (diagonal blocks) — MXU matmuls
+    s_qk = jnp.einsum("bucgn,bukgn->buckg", cc, bc,
+                      preferred_element_type=jnp.float32)   # (B,nc,Cq,Ck,G)
+    s_qk = jnp.repeat(s_qk, hpg, axis=-1)                   # G -> H
+    y_diag = jnp.einsum("buckh,bukhp->buchp", s_qk * L, xc,
+                        preferred_element_type=jnp.float32)
+
+    # chunk end-states: sum_k exp(cum_end - cum_k) b_k ⊗ x_k
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,nc,C,H)
+    states = jnp.einsum("bukgn,bukh,bukhp->buhpn", bc, decay_to_end, xc,
+                        preferred_element_type=jnp.float32)  # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (B,nc,H)
+
+    def step(h, inp):
+        st, dec = inp                                       # (B,H,P,N),(B,H)
+        return h * dec[..., None, None] + st, h
+
+    h_last, h_prev = jax.lax.scan(
+        jax.checkpoint(step), h0, (states.transpose(1, 0, 2, 3, 4),
+                                   chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                # state before chunk
+
+    # off-diagonal: y += (C_t * decay-from-chunk-start) . h_prev
+    decay_from_start = jnp.exp(cum)                         # (B,nc,C,H)
+    c_h = jnp.repeat(cc, hpg, axis=-2)                      # (B,nc,C,H,N)
+    y_off = jnp.einsum("buchn,buhpn->buchp",
+                       c_h * decay_from_start[..., None], h_prev,
+                       preferred_element_type=jnp.float32)
+    y = (y_diag + y_off).reshape(B, n_chunks * C_, H, P)
+    return y[:, :S], h_last
+
+
+def _mamba2_split(params, cfg, x):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    gn = s.n_groups * s.state_dim
+    proj = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    proj = logical_shard(proj, ("data",), None, ("model",))
+    xin, z, b, c, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + gn, 2 * di + 2 * gn], axis=-1)
+    return xin, z, b, c, dt
+
+
+def _mamba2_prep(params, cfg, xin_c, dt_raw):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    B, S = xin_c.shape[:2]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                            # (nh,)
+    a_log = dt * A[None, None, :]                            # (B,S,nh)
+    xh = xin_c.reshape(B, S, nh, s.head_dim).astype(jnp.float32) * dt[..., None]
+    xh = shard_heads(xh)
+    a_log = logical_shard(a_log, ("data",), None, ("model",))
+    return xh, a_log
+
+
+def _mamba2_out(params, cfg, y, xin_c, z):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    B, S = z.shape[:2]
+    y = y + params["D"][None, None, :, None] \
+        * xin_c.reshape(B, S, nh, s.head_dim).astype(jnp.float32)
+    y = y.reshape(B, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))               # gated rmsnorm
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * params["norm_scale"].astype(jnp.float32)
+    return jnp.einsum("bsd,df->bsf", y.astype(z.dtype), params["w_out"])
+
+
+def mamba2_apply(params: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    return mamba2_prefill(params, cfg, x)[0]
+
+
+def mamba2_prefill(params: Dict, cfg: ModelConfig, x: jax.Array):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    B, S = x.shape[:2]
+    xin, z, b, c, dt = _mamba2_split(params, cfg, x)
+    conv_feed = jnp.concatenate([xin, b, c], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_feed, params["conv"],
+                                        params["conv_b"]))
+    gn = s.n_groups * s.state_dim
+    xin_c, b_c, c_c = jnp.split(conv_out, [di, di + gn], axis=-1)
+    xh, a_log = _mamba2_prep(params, cfg, xin_c, dt)
+    bmat = b_c.reshape(B, S, s.n_groups, s.state_dim).astype(jnp.float32)
+    cmat = c_c.reshape(B, S, s.n_groups, s.state_dim).astype(jnp.float32)
+    h0 = jnp.zeros((B, nh, s.head_dim, s.state_dim), jnp.float32)
+    y, h_last = _ssd_chunked(xh, a_log, bmat, cmat, h0)
+    out = _mamba2_out(params, cfg, y, xin_c, z)
+    K = s.conv_dim
+    conv_buf = (jnp.pad(conv_feed, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):]
+                if K > 1 else jnp.zeros((B, 0, conv_feed.shape[-1]), x.dtype))
+    return out, {"h": h_last, "conv": conv_buf}
+
+
+def mamba2_decode(params: Dict, cfg: ModelConfig, x: jax.Array, cache: Dict):
+    """x: (B, 1, D). O(1) single-step SSD recurrence."""
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    B = x.shape[0]
+    xin, z, b, c, dt = _mamba2_split(params, cfg, x)
+    conv_feed = jnp.concatenate([xin, b, c], axis=-1)        # (B,1,ch)
+    window = jnp.concatenate([cache["conv"].astype(x.dtype), conv_feed], axis=1)
+    conv_out = jax.nn.silu(_conv_step(window[:, -s.conv_dim:], params["conv"],
+                                      params["conv_b"]))[:, None]
+    gn = s.n_groups * s.state_dim
+    xin_c, b_c, c_c = jnp.split(conv_out.astype(x.dtype), [di, di + gn], axis=-1)
+    xh, a_log = _mamba2_prep(params, cfg, xin_c, dt)         # (B,1,nh,P)
+    bmat = b_c.reshape(B, s.n_groups, s.state_dim).astype(jnp.float32)
+    cmat = c_c.reshape(B, s.n_groups, s.state_dim).astype(jnp.float32)
+    hpg = nh // s.n_groups
+    b_h = jnp.repeat(bmat, hpg, axis=1)                      # (B,nh,N)
+    c_h = jnp.repeat(cmat, hpg, axis=1)
+    decay = jnp.exp(a_log[:, 0])                             # (B,nh)
+    h_new = cache["h"] * decay[..., None, None] + \
+        jnp.einsum("bhp,bhn->bhpn", xh[:, 0], b_h)
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, c_h)[:, None]     # (B,1,nh,P)
+    out = _mamba2_out(params, cfg, y, xin_c, z)
+    new_conv = window[:, 1:] if s.conv_dim > 1 else cache["conv"]
+    return out, {"h": h_new, "conv": new_conv}

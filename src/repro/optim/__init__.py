@@ -1,0 +1,7 @@
+from repro.optim.sgd import (adamw_init, adamw_update, momentum_init,
+                             momentum_update, sgd_update, make_optimizer)
+from repro.optim.schedules import constant, cosine, warmup_cosine
+
+__all__ = ["adamw_init", "adamw_update", "momentum_init", "momentum_update",
+           "sgd_update", "make_optimizer", "constant", "cosine",
+           "warmup_cosine"]

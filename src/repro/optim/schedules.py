@@ -1,0 +1,27 @@
+"""LR schedules as step -> lr callables (jnp-friendly)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.float32(lr * (final_frac + (1 - final_frac) * cos))
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine(lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def fn(step):
+        warm = lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps)
+                         ).astype(jnp.float32)
+    return fn

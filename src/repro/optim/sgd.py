@@ -1,0 +1,76 @@
+"""Optimizers as pure functions on pytrees. The paper trains with plain SGD
+(Eq 2) — that is the default everywhere; momentum/adamw are provided for the
+framework side."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def sgd_update(params: PyTree, grads: PyTree, lr) -> PyTree:
+    return jax.tree.map(lambda p, g: (p - lr * g.astype(jnp.float32)
+                                      ).astype(p.dtype), params, grads)
+
+
+def momentum_init(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def momentum_update(params, grads, state, lr, beta=0.9):
+    new_state = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                             state, grads)
+    new_params = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype),
+                              params, new_state)
+    return new_params, new_state
+
+
+def adamw_init(params: PyTree) -> Dict:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                     * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return (p - step - lr * weight_decay * p.astype(jnp.float32)
+                ).astype(p.dtype)
+
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+
+def make_optimizer(name: str) -> Tuple[Callable, Callable]:
+    """Returns (init_fn(params) -> state, update_fn(params, grads, state, lr)
+    -> (params, state))."""
+    if name == "sgd":
+        return (lambda p: (), lambda p, g, s, lr: (sgd_update(p, g, lr), s))
+    if name == "momentum":
+        return (momentum_init,
+                lambda p, g, s, lr: momentum_update(p, g, s, lr))
+    if name == "adamw":
+        return (adamw_init, lambda p, g, s, lr: adamw_update(p, g, s, lr))
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,4 @@
+from repro.roofline.analysis import roofline_terms
+from repro.roofline.hlo import collective_bytes_from_hlo
+
+__all__ = ["roofline_terms", "collective_bytes_from_hlo"]

@@ -1,0 +1,61 @@
+"""Parse collective traffic out of compiled HLO text.
+
+``cost_analysis`` has no collective-bytes entry, so we sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in the optimized module. Shapes like
+``bf16[2,4096,512]{2,1,0}`` are decoded to bytes; the per-op contribution is
+the op's OUTPUT shape bytes (bytes landing on the wire per participating
+device is proportional; the roofline term divides by per-device link BW).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ag = bf16[8,128]{1,0} all-gather(...)
+#        tuple shapes: (f32[8]{0}, f32[16]{0}) all-to-all(...)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict:
+    """Returns {"total": bytes, "by_kind": {kind: bytes}, "count": int}.
+    '-done' ops are skipped (their '-start' twin carries the shape)."""
+    by_kind: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    count = 0
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if f"{kind}-done(" in m.group(0):
+            continue
+        b = _shape_bytes(shape_str)
+        by_kind[kind] += b
+        count += 1
+    return {"total": sum(by_kind.values()),
+            "by_kind": {k: v for k, v in by_kind.items() if v},
+            "count": count}

@@ -1,0 +1,5 @@
+from repro.sharding.rules import (batch_spec, cache_shardings,
+                                  param_shardings, spec_for_param)
+
+__all__ = ["batch_spec", "cache_shardings", "param_shardings",
+           "spec_for_param"]

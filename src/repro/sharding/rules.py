@@ -1,0 +1,174 @@
+"""Parameter/batch PartitionSpec rules.
+
+Strategy (single pod, mesh ("data", "model")):
+  - 2-D weight matrices (D_in, D_out): FSDP over "data" on the input dim,
+    tensor-parallel over "model" on the output dim — except down/out
+    projections, which are ("model", "data") so the TP axis contracts.
+  - expert tensors (E, D, F): expert-parallel — E over "model", D over "data".
+  - embeddings (V, D): vocab over "model", d_model over "data".
+  - vectors (norm scales, biases): replicated.
+  - scan-stacked params carry a leading layer axis: rules apply to the
+    suffix; the L axis is never sharded.
+Batch: tokens/labels (B, S) -> ("data", None).
+
+Multi-pod ("pod", "data", "model"):
+  - train: the "pod" axis is the FL-client axis — params take a leading
+    client dim sharded over "pod" (each pod holds its own client's weights);
+    the rules below then apply to the remaining dims
+    (``param_shardings(..., client_axis=True)``).
+  - prefill/decode: serving replicas — batch dims shard over
+    ("pod", "data") (``pod_batch=True``), params replicated over "pod".
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+_MATRIX_RULES: Dict[str, Tuple] = {
+    # attention
+    "wq": ("data", "model"), "wk": ("data", "model"), "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    "wq_a": ("data", "model"), "wq_b": ("data", "model"),
+    "wkv_a": ("data", "model"), "wkv_b": ("data", "model"),
+    # mlp
+    "w_gate": ("data", "model"), "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    # ssm
+    "w_in": ("data", "model"), "w_out": ("model", "data"),
+    "w_x": ("model", None), "w_dt": (None, "model"),
+    "A_log": ("model", None), "conv": (None, "model"),
+    # router
+    "router": ("data", None),
+    # embeddings / head
+    "embed": ("model", "data"), "lm_head": ("data", "model"),
+}
+
+_EXPERT_RULES: Dict[str, Tuple] = {
+    # (E, D, F) / (E, F, D): expert parallel over model, fsdp over data
+    "w_gate": ("model", "data", None),
+    "w_up": ("model", "data", None),
+    "w_down": ("model", "data", None),
+}
+
+
+def spec_for_param(path: Tuple[str, ...], shape: Tuple[int, ...],
+                   mesh_axis_sizes: Dict[str, int]) -> P:
+    """Best-effort rule lookup with divisibility checks."""
+    name = path[-1]
+    in_expert_stack = (len(shape) >= 3 and name in _EXPERT_RULES
+                       and "moe" in path)
+    base: Optional[Tuple] = None
+    if in_expert_stack:
+        base = _EXPERT_RULES[name]
+    elif name in _MATRIX_RULES:
+        base = _MATRIX_RULES[name]
+    if base is None:
+        return P()
+    n_stack = len(shape) - len(base)
+    if n_stack < 0:
+        base = base[:len(shape)]
+        n_stack = 0
+    spec = [None] * n_stack + list(base)
+    for i, ax in enumerate(spec):
+        if ax is None:
+            continue
+        size = mesh_axis_sizes.get(ax)
+        if size is None or shape[i] % size != 0:
+            spec[i] = None
+    return P(*spec)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_shardings(mesh, params_shape: PyTree, *, client_axis: bool = False
+                    ) -> PyTree:
+    """NamedShardings for an (abstract) params tree."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf(path, leaf_shape):
+        names = _path_names(path)
+        shape = tuple(leaf_shape.shape)
+        if client_axis:
+            if names[-1] == "embed":
+                # XLA SPMD PartitionGather crashes (C++ abort) on a sharded
+                # embedding gather inside a partial-manual shard_map —
+                # replicate the table within each pod (client) instead.
+                spec = P("pod")
+            else:
+                spec = P("pod", *spec_for_param(names, shape[1:], sizes))
+        else:
+            spec = spec_for_param(names, shape, sizes)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def batch_spec(name: str, ndim: int, *, client_axis: bool = False,
+               pod_batch: bool = False) -> P:
+    """Spec for a model input. client_axis: leading FL-client dim over "pod";
+    pod_batch: batch dim over ("pod", "data") (serving replicas)."""
+    batch_axis = ("pod", "data") if pod_batch else "data"
+    lead = ("pod",) if client_axis else ()
+    rest = ndim - len(lead)
+    if name == "positions" or rest < 1:
+        return P(*lead, *([None] * rest))     # scalars (pos) stay replicated
+    # tokens / labels / token / stub_embeds: leading batch dim
+    return P(*lead, batch_axis, *([None] * (rest - 1)))
+
+
+def cache_shardings(mesh, cache_shape: PyTree, *, pod_batch: bool = False
+                    ) -> PyTree:
+    """KV/SSM caches: batch dim over "data" (or ("pod","data") for serving
+    replicas), head/feature dim over "model".
+
+    Layouts (with optional leading L/A stack axis):
+      k/v:          (L, B, S, KH, Dh) -> (None, data, None, model, None)
+      c_kv/k_rope:  (L, B, S, r)      -> (None, data, None, None)
+      ssm h:        (L, B, ..., N)    -> (None, data, model, ...)
+      conv:         (L, B, K-1, C)    -> (None, data, None, model)
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axis = ("pod", "data") if pod_batch else "data"
+
+    def div_ok(ax, dim):
+        if isinstance(ax, tuple):
+            total = 1
+            for a in ax:
+                if a not in sizes:
+                    return False
+                total *= sizes[a]
+            return dim % total == 0
+        return ax in sizes and dim % sizes[ax] == 0
+
+    def leaf(path, leaf_shape):
+        names = _path_names(path)
+        shape = tuple(leaf_shape.shape)
+        name = names[-1]
+        stack = 1 if any(n in ("layers", "dense_layers", "shared_attn", "ssm")
+                         for n in names[:-1]) else 0
+        spec: list = [None] * len(shape)
+        spec[stack] = batch_axis
+        if name in ("k", "v") and len(shape) >= stack + 4:
+            tp = sizes.get("model", 1)
+            if tp > 1 and shape[stack + 2] % tp == 0:
+                spec[stack + 2] = "model"       # KV heads
+            else:
+                spec[stack + 3] = "model"       # head_dim fallback
+        elif name in ("c_kv", "k_rope"):
+            spec[len(shape) - 1] = "model"   # latent feature dim
+        elif name == "h":
+            spec[stack + 1] = "model"
+        elif name == "conv":
+            spec[stack + 2] = "model"
+        for i, ax in enumerate(spec):
+            if ax is not None and not div_ok(ax, shape[i]):
+                spec[i] = None
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shape)

@@ -1,0 +1,6 @@
+from repro.utils.pytree import (param_bytes, param_count, tree_add, tree_scale,
+                                tree_weighted_sum, tree_zeros_like)
+from repro.utils.shardutil import logical_shard
+
+__all__ = ["param_bytes", "param_count", "tree_add", "tree_scale",
+           "tree_weighted_sum", "tree_zeros_like", "logical_shard"]

@@ -1,0 +1,40 @@
+"""Pytree helpers used by the aggregation/EM layers."""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def param_count(tree: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree: PyTree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_weighted_sum(trees: Sequence[PyTree], weights) -> PyTree:
+    """sum_i w[i] * trees[i] — the Eq (1) neighbor mix on pytrees."""
+    w = jnp.asarray(weights)
+
+    def mix(*leaves):
+        stacked = jnp.stack(leaves)                     # (M, ...)
+        return jnp.tensordot(w.astype(stacked.dtype), stacked, axes=1)
+
+    return jax.tree.map(mix, *trees)

@@ -1,0 +1,111 @@
+"""Mesh-agnostic sharding constraints.
+
+Model code calls ``logical_shard(x, "data", None, "model")``. If no mesh is
+active (unit tests, single CPU) this is a no-op; under ``jax.set_mesh`` it
+becomes a ``with_sharding_constraint``. Axis names absent from the active
+mesh are dropped from the spec, so the same model code lowers on the
+(16,16) "data","model" mesh and inside the pod-manual shard_map.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+# set while tracing inside the partial-manual (pod) shard_map: some SPMD
+# partitioner paths (batched gathers in the MoE dispatch) hard-abort under
+# a manual mesh axis — callers consult this to pick a safe lowering
+_MANUAL_POD = False
+
+
+class manual_pod_context:
+    def __enter__(self):
+        global _MANUAL_POD
+        self._prev = _MANUAL_POD
+        _MANUAL_POD = True
+
+    def __exit__(self, *a):
+        global _MANUAL_POD
+        _MANUAL_POD = self._prev
+
+
+def in_manual_pod() -> bool:
+    return _MANUAL_POD
+
+
+def _active_axis_names():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return ()
+    if mesh is None or getattr(mesh, "empty", False):
+        return ()
+    return tuple(mesh.axis_names)
+
+
+def mesh_axis_sizes() -> dict:
+    """{axis_name: size} for the active (abstract) mesh, {} if none."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return {}
+    if mesh is None or getattr(mesh, "empty", False):
+        return {}
+    try:
+        return dict(mesh.shape)
+    except Exception:
+        return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def shard_heads(x, head_axis: int = 2):
+    """Shard a (B, S, H, ...) activation: heads over "model" when they
+    divide; otherwise batch over ("data", "model") when it divides (the
+    context/batch fallback for small-KH GQA); otherwise batch over "data".
+    """
+    sizes = mesh_axis_sizes()
+    if not sizes:
+        return x
+    tp = sizes.get("model", 1)
+    dp = sizes.get("data", 1)
+    spec: list = [None] * x.ndim
+    if tp > 1 and x.shape[head_axis] % tp == 0:
+        spec[0] = ("data",)
+        spec[head_axis] = ("model",)
+    elif x.shape[0] % (dp * tp) == 0:
+        spec[0] = ("data", "model")
+    else:
+        spec[0] = ("data",)
+    return logical_shard(x, *spec)
+
+
+def logical_shard(x, *spec: AxisName):
+    names = _active_axis_names()
+    if not names:
+        return x
+
+    sizes = mesh_axis_sizes()
+
+    def keep(i: int, entry: AxisName) -> Optional[AxisName]:
+        if entry is None:
+            return None
+        if isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a in names)
+        else:
+            kept = (entry,) if entry in names else ()
+        if not kept:
+            return None
+        total = 1
+        for a in kept:
+            total *= sizes.get(a, 1)
+        if i < x.ndim and x.shape[i] % total != 0:
+            return None                      # don't force uneven sharding
+        return kept if len(kept) > 1 else kept[0]
+
+    resolved = P(*[keep(i, e) for i, e in enumerate(spec)])
+    try:
+        return jax.lax.with_sharding_constraint(x, resolved)
+    except Exception:
+        return x

@@ -1,0 +1,95 @@
+"""Eq (1) aggregation tests (simulation mix + erasures)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation
+from repro.utils import tree_weighted_sum
+
+
+def _tree(seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(0, scale, (4, 3)).astype(np.float32)),
+            "b": {"c": jnp.asarray(rng.normal(0, scale, (5,)).astype(np.float32))}}
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def test_mix_params_matches_manual():
+    own = _tree(0)
+    ns = _stack([_tree(1), _tree(2)])
+    pi = jnp.array([0.25, 0.75])
+    out = aggregation.mix_params(own, ns, pi, 0.4)
+    manual_mix = tree_weighted_sum([_tree(1), _tree(2)], pi)
+    expect = jax.tree.map(lambda o, m: 0.4 * o + 0.6 * m, own, manual_mix)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+def test_alpha_one_keeps_own_model():
+    own = _tree(0)
+    ns = _stack([_tree(1), _tree(2)])
+    out = aggregation.mix_params(own, ns, jnp.array([0.5, 0.5]), 1.0)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(own)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_identical_models_fixed_point():
+    """If everyone has the same weights, Eq (1) is the identity (any α, π)."""
+    own = _tree(7)
+    ns = _stack([_tree(7), _tree(7), _tree(7)])
+    out = aggregation.mix_params(own, ns, jnp.array([0.2, 0.3, 0.5]), 0.37)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(own)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+def test_masked_pi_renormalizes():
+    pi = jnp.array([0.2, 0.3, 0.5])
+    w = aggregation.masked_pi(pi, jnp.array([True, False, True]))
+    np.testing.assert_allclose(np.asarray(w), [0.2 / 0.7, 0.0, 0.5 / 0.7],
+                               rtol=1e-5)
+
+
+def test_all_links_failed_keeps_local():
+    own = _tree(0)
+    ns = _stack([_tree(1), _tree(2)])
+    out = aggregation.mix_params_with_erasures(
+        own, ns, jnp.array([0.5, 0.5]), 0.5, jnp.array([False, False]))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(own)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_erasure_equals_renormalized_mix():
+    own = _tree(0)
+    n1, n2, n3 = _tree(1), _tree(2), _tree(3)
+    ns = _stack([n1, n2, n3])
+    pi = jnp.array([0.5, 0.2, 0.3])
+    out = aggregation.mix_params_with_erasures(
+        own, ns, pi, 0.5, jnp.array([True, False, True]))
+    # equivalent: mix over surviving neighbors with renormalized π
+    pi_surv = jnp.array([0.5 / 0.8, 0.3 / 0.8])
+    expect = aggregation.mix_params(own, _stack([n1, n3]), pi_surv, 0.5)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(alpha=st.floats(0.0, 1.0),
+       pi_raw=st.lists(st.floats(0.01, 1.0), min_size=2, max_size=5))
+def test_mix_convexity_bound(alpha, pi_raw):
+    """Eq (1) output is a convex combination => every coordinate is within
+    the [min, max] envelope of the inputs."""
+    pi = jnp.asarray(pi_raw, jnp.float32)
+    pi = pi / jnp.sum(pi)
+    M = len(pi_raw)
+    own = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 1, (6,))
+                            .astype(np.float32))}
+    trees = [{"w": jnp.asarray(np.random.default_rng(i + 1).normal(0, 1, (6,))
+                               .astype(np.float32))} for i in range(M)]
+    out = aggregation.mix_params(own, _stack(trees), pi, alpha)["w"]
+    allw = np.stack([np.asarray(own["w"])] + [np.asarray(t["w"]) for t in trees])
+    assert np.all(np.asarray(out) <= allw.max(0) + 1e-5)
+    assert np.all(np.asarray(out) >= allw.min(0) - 1e-5)

@@ -1,0 +1,99 @@
+"""EM weight-assignment tests (Eq 9-11, Appendix B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import em
+
+
+def _rand_losses(seed, n, m, scale=3.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0, scale, (n, m)).astype(np.float32))
+
+
+def test_posterior_rows_on_simplex():
+    pi = jnp.array([0.2, 0.3, 0.5])
+    lam = em.posterior(pi, _rand_losses(0, 50, 3))
+    np.testing.assert_allclose(np.asarray(jnp.sum(lam, axis=1)), 1.0,
+                               rtol=1e-5)
+    assert bool(jnp.all(lam >= 0))
+
+
+def test_posterior_prefers_low_loss_component():
+    pi = jnp.array([0.5, 0.5])
+    losses = jnp.array([[0.1, 5.0]] * 10)
+    lam = em.posterior(pi, losses)
+    assert bool(jnp.all(lam[:, 0] > 0.9))
+
+
+def test_update_pi_is_mean_of_posteriors():
+    lam = em.posterior(jnp.array([0.25, 0.75]), _rand_losses(1, 32, 2))
+    pi = em.update_pi(lam)
+    np.testing.assert_allclose(np.asarray(pi),
+                               np.asarray(jnp.mean(lam, axis=0)), rtol=1e-6)
+
+
+def test_em_monotone_log_likelihood():
+    """E/M steps must never decrease the mixture log-likelihood."""
+    losses = _rand_losses(2, 64, 4)
+    pi = jnp.full((4,), 0.25)
+    prev = float(em.mixture_log_likelihood(pi, losses))
+    for _ in range(10):
+        lam = em.posterior(pi, losses)
+        pi = em.update_pi(lam)
+        cur = float(em.mixture_log_likelihood(pi, losses))
+        assert cur >= prev - 1e-4
+        prev = cur
+
+
+def test_em_weights_converges_to_fixed_point():
+    losses = _rand_losses(3, 128, 3)
+    pi0 = jnp.array([1 / 3] * 3)
+    pi, lam = em.em_weights(pi0, losses, iters=50)
+    # one more E/M step doesn't move π
+    pi2 = em.update_pi(em.posterior(pi, losses, 1e-8))
+    np.testing.assert_allclose(np.asarray(pi), np.asarray(pi2), atol=1e-4)
+
+
+def test_em_identifies_similar_component():
+    """Neighbor whose model fits the data (low loss) gets the top weight —
+    the Fig 8 behavior."""
+    rng = np.random.default_rng(5)
+    losses = np.column_stack([
+        rng.uniform(0.0, 0.5, 200),    # similar neighbor
+        rng.uniform(2.0, 4.0, 200),    # dissimilar
+        rng.uniform(1.0, 3.0, 200),
+    ]).astype(np.float32)
+    pi, _ = em.em_weights(jnp.full((3,), 1 / 3), jnp.asarray(losses),
+                          iters=20)
+    assert int(jnp.argmax(pi)) == 0
+    assert float(pi[0]) > 0.8
+
+
+@settings(max_examples=25, deadline=None)
+@given(losses=hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
+                                                      min_side=2,
+                                                      max_side=12),
+                         elements=st.floats(0, 20, width=32)))
+def test_em_weights_always_simplex(losses):
+    n, m = losses.shape
+    pi, lam = em.em_weights(jnp.full((m,), 1.0 / m), jnp.asarray(losses),
+                            iters=5)
+    assert np.isclose(float(jnp.sum(pi)), 1.0, atol=1e-4)
+    assert bool(jnp.all(pi >= 0))
+    assert np.allclose(np.asarray(jnp.sum(lam, axis=1)), 1.0, atol=1e-4)
+
+
+def test_weighted_loss_matches_manual():
+    losses = jnp.array([1.0, 2.0, 3.0])
+    lam = jnp.array([1.0, 0.0, 1.0])
+    assert np.isclose(float(em.weighted_loss(losses, lam)), 2.0)
+
+
+def test_extreme_losses_no_nan():
+    losses = jnp.array([[1e4, 0.0], [0.0, 1e4]], jnp.float32)
+    pi, lam = em.em_weights(jnp.array([0.5, 0.5]), losses, iters=5)
+    assert bool(jnp.all(jnp.isfinite(pi)))
+    assert bool(jnp.all(jnp.isfinite(lam)))

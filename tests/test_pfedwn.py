@@ -1,0 +1,117 @@
+"""Integration tests of the pFedWN round engine + federated simulator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PFLConfig
+from repro.configs.paper_cnn import CNNConfig
+from repro.core import pfedwn
+from repro.core.fedsim import FederatedSimulation, FedSimConfig
+from repro.data import (dirichlet_partition, make_client_datasets,
+                        synthetic_image_dataset, train_test_split)
+from repro.models import cnn
+
+
+def _quadratic_fns(dim=4):
+    """Toy model: params w; per-sample loss = ||w - x_i||² (x_i the data).
+    EM over such components has a known geometry."""
+    def psl(w, x, y):
+        return jnp.sum((w[None, :] - x) ** 2, axis=1)
+
+    return pfedwn.ModelFns(
+        per_sample_loss=psl,
+        loss=lambda w, x, y: jnp.mean(psl(w, x, y)),
+        accuracy=lambda w, x, y: -jnp.mean(psl(w, x, y)),
+    )
+
+
+def test_component_losses_shape():
+    fns = _quadratic_fns()
+    comps = jnp.stack([jnp.zeros(4), jnp.ones(4)])
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (10, 4)))
+    losses = pfedwn.component_losses(fns, comps, x, None)
+    assert losses.shape == (10, 2)
+
+
+def test_pfedwn_round_moves_toward_similar_neighbor():
+    """Target data clusters at +1; neighbor A sits at +1 (similar), B at -5.
+    After a round, π should favor A and the target should move toward +1."""
+    fns = _quadratic_fns()
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(1.0, 0.1, (64, 4)))
+    target = jnp.zeros(4)
+    neighbors = jnp.stack([jnp.full((4,), 1.0), jnp.full((4,), -5.0)])
+    cfg = PFLConfig(alpha=0.5, lr=0.05, em_iters=5)
+
+    def local_train(w, key):
+        g = jax.grad(lambda p: fns.loss(p, x, None))(w)
+        return w - 0.05 * g
+
+    new_w, pi, info = pfedwn.pfedwn_round(
+        jax.random.PRNGKey(0), fns, target, neighbors,
+        jnp.array([0.5, 0.5]), x, None, jnp.array([0.0, 0.0]), cfg,
+        local_train, component_steps=0)
+    assert float(pi[0]) > 0.9                      # similar neighbor wins
+    assert float(jnp.mean(new_w)) > float(jnp.mean(target))
+
+
+def test_pfedwn_round_erasure_fallback():
+    """P_err = 1 on every link => aggregation must reduce to local-only."""
+    fns = _quadratic_fns()
+    x = jnp.asarray(np.random.default_rng(1).normal(0, 1, (16, 4)))
+    target = jnp.full((4,), 2.0)
+    neighbors = jnp.stack([jnp.full((4,), -9.0)])
+    cfg = PFLConfig(alpha=0.5, lr=0.0, em_iters=2)
+    new_w, pi, info = pfedwn.pfedwn_round(
+        jax.random.PRNGKey(0), fns, target, neighbors, jnp.array([1.0]),
+        x, None, jnp.array([1.0]), cfg, lambda w, k: w, component_steps=0)
+    np.testing.assert_allclose(np.asarray(new_w), np.asarray(target),
+                               atol=1e-6)
+    assert not bool(info["link_ok"][0])
+
+
+@pytest.fixture(scope="module")
+def small_sim():
+    model_cfg = CNNConfig(image_size=16, widths=(8, 16), hidden=32,
+                          n_classes=10)
+    base = synthetic_image_dataset(0, 4000, image_size=16, n_classes=10)
+    parts = dirichlet_partition(base.y, 5, alpha=0.1, seed=0)
+    train_sets = make_client_datasets(
+        base, [train_test_split(p, seed=1)[0] for p in parts])
+    test_sets = make_client_datasets(
+        base, [train_test_split(p, seed=1)[1] for p in parts])
+    pm = np.ones(5, bool)
+    p_err = np.array([0.0, 0.02, 0.05, 0.1, 0.12], np.float32)
+    sim = FedSimConfig(rounds=4, batch_size=32, lr=0.05, em_iters=3, seed=0)
+    return FederatedSimulation(model_cfg, train_sets, test_sets, pm, p_err,
+                               sim)
+
+
+def test_fedsim_all_methods_run(small_sim):
+    for method in ["local", "fedavg", "fedprox", "perfedavg", "fedamp",
+                   "pfedwn"]:
+        h = small_sim.run(method)
+        assert 0.0 <= h["max_target_acc"] <= 1.0
+        assert len(h["target_acc"]) >= 1
+
+
+def test_fedsim_fig1_gap(small_sim):
+    """The paper's Fig 1 phenomenon: under non-IID splits, FedAvg's global
+    model underperforms local training on the target client."""
+    local = small_sim.run("local")["max_target_acc"]
+    fedavg = small_sim.run("fedavg")["max_target_acc"]
+    assert local > fedavg + 0.1
+
+
+def test_fedsim_pfedwn_beats_fedavg(small_sim):
+    fedavg = small_sim.run("fedavg")["max_target_acc"]
+    pfed = small_sim.run("pfedwn")["max_target_acc"]
+    assert pfed > fedavg
+
+
+def test_fedsim_pi_is_simplex(small_sim):
+    h = small_sim.run("pfedwn")
+    pi = h["pi"][-1]
+    assert np.isclose(pi.sum(), 1.0, atol=1e-4)
+    assert np.all(pi >= 0)

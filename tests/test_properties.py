@@ -1,0 +1,130 @@
+"""Hypothesis property tests on system invariants beyond the per-module
+suites: RoPE isometry, ring-buffer slot arithmetic, quadrature accuracy,
+and the pFedWN round's contraction behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import WirelessConfig
+from repro.core import wireless
+from repro.models.attention import ring_slot_positions
+from repro.models.rope import apply_rope
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), pos0=st.integers(0, 10_000))
+def test_rope_preserves_norm(seed, pos0):
+    """Rotary embedding is an isometry per head."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (1, 4, 2, 64))
+    pos = jnp.arange(pos0, pos0 + 4)
+    y = apply_rope(x, pos, variant="rope", theta=10000.0)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(x, axis=-1)),
+        np.asarray(jnp.linalg.norm(y, axis=-1)), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_rope_relative_property(seed):
+    """<rope(q, m), rope(k, n)> depends only on m - n."""
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 32))
+
+    def score(m, n):
+        qm = apply_rope(q, jnp.array([m]), variant="rope", theta=100.0)
+        kn = apply_rope(k, jnp.array([n]), variant="rope", theta=100.0)
+        return float(jnp.sum(qm * kn))
+
+    assert abs(score(5, 3) - score(105, 103)) < 1e-3
+    assert abs(score(7, 7) - score(0, 0)) < 1e-3
+
+
+def test_rope_partial_fraction_leaves_tail():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 3, 2, 64))
+    y = apply_rope(x, jnp.arange(3), variant="rope2d", theta=1e4,
+                   fraction=0.5)
+    np.testing.assert_array_equal(np.asarray(x[..., 32:]),
+                                  np.asarray(y[..., 32:]))
+    assert float(jnp.max(jnp.abs(x[..., :32] - y[..., :32]))) > 1e-5
+
+
+def test_mrope_equals_rope_when_positions_identical():
+    """With t==h==w positions, M-RoPE must reduce to standard RoPE."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 5, 2, 64))
+    pos = jnp.arange(5)
+    pos3 = jnp.stack([pos, pos, pos], axis=-1)
+    a = apply_rope(x, pos, variant="rope", theta=1e4)
+    b = apply_rope(x, pos3, variant="mrope", theta=1e4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(pos=st.integers(0, 10_000_000), window=st.integers(1, 4096))
+def test_ring_slot_positions_invariants(pos, window):
+    """slot_pos ≡ slot (mod W), slot_pos <= pos, and the window mask keeps
+    exactly min(pos+1, W) entries."""
+    sp = np.asarray(ring_slot_positions(jnp.int32(pos), window))
+    slots = np.arange(window)
+    written = sp >= 0
+    assert np.all(sp[written] % window == slots[written])
+    assert np.all(sp[written] <= pos)
+    mask = (sp >= 0) & (sp > pos - window)
+    assert mask.sum() == min(pos + 1, window)
+    # the just-written slot maps to pos itself
+    assert sp[pos % window] == pos
+
+
+def test_error_probability_against_monte_carlo():
+    """Quadrature P_err vs a direct Monte-Carlo simulation of the channel
+    model (Rayleigh main link, log-normal-approx interference)."""
+    cfg = WirelessConfig()
+    link, interferers = 8.0, jnp.array([15.0, 20.0, 25.0])
+    gamma_th = 10.0
+    p_quad = float(wireless.error_probability(
+        cfg, jnp.float32(link), interferers, gamma_th))
+
+    rng = np.random.default_rng(0)
+    n = 200_000
+    g, beta = cfg.rayleigh_gamma, cfg.fading_threshold
+    x = rng.rayleigh(np.sqrt(g / 2), n)           # E[x^2] = Γ
+    mean, var = wireless.interference_moments(cfg, interferers)
+    mu, sigma = wireless.lognormal_params(mean, var)
+    I = rng.lognormal(float(mu), float(sigma), n)
+    h2 = float(wireless.path_loss_amplitude(cfg, jnp.float32(link))) ** 2
+    sinr = cfg.tx_power_w * h2 * x**2 / (cfg.noise_power + I)
+    p_mc = float(np.mean((x >= beta) & (sinr < gamma_th)))
+    assert abs(p_quad - p_mc) < 0.01
+
+
+@settings(max_examples=15, deadline=None)
+@given(alpha=st.floats(0.1, 0.9), seed=st.integers(0, 100))
+def test_round_is_contraction_for_identical_data(alpha, seed):
+    """If target and neighbors share the SAME quadratic objective, the
+    pFedWN round must not move the target away from the optimum."""
+    from repro.configs import PFLConfig
+    from repro.core import pfedwn
+
+    rng = np.random.default_rng(seed)
+    opt = jnp.asarray(rng.normal(0, 1, 4))
+    x = jnp.asarray(rng.normal(0, 0.05, (32, 4))) + opt[None]
+
+    def psl(w, xx, yy):
+        return jnp.sum((w[None] - xx) ** 2, axis=1)
+
+    fns = pfedwn.ModelFns(psl, lambda w, xx, yy: jnp.mean(psl(w, xx, yy)),
+                          lambda w, xx, yy: -jnp.mean(psl(w, xx, yy)))
+    target = opt + 1.0
+    neighbors = jnp.stack([opt + 0.5, opt - 0.5])
+    cfg = PFLConfig(alpha=alpha, lr=0.05, em_iters=3)
+    new_w, pi, _ = pfedwn.pfedwn_round(
+        jax.random.PRNGKey(seed), fns, target, neighbors,
+        jnp.array([0.5, 0.5]), x, None, jnp.zeros(2), cfg,
+        lambda w, k: w - 0.05 * jax.grad(
+            lambda p: fns.loss(p, x, None))(w),
+        component_steps=0)
+    d_before = float(jnp.linalg.norm(target - opt))
+    d_after = float(jnp.linalg.norm(new_w - opt))
+    assert d_after <= d_before + 1e-5

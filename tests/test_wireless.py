@@ -1,0 +1,130 @@
+"""Wireless channel model tests (Sec III-B + Appendix A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import WirelessConfig
+from repro.core import selection, wireless
+
+CFG = WirelessConfig()
+
+
+def test_path_loss_at_reference_distance():
+    # at d0: |ĥ|² = (λ / 4π d0)²
+    amp = wireless.path_loss_amplitude(CFG, jnp.array(1.0))
+    expect = CFG.wavelength / (4 * np.pi * CFG.ref_distance_m)
+    assert np.isclose(float(amp), expect, rtol=1e-6)
+
+
+def test_path_loss_monotone_decreasing():
+    d = jnp.array([1.0, 2.0, 5.0, 10.0, 50.0])
+    amp = wireless.path_loss_amplitude(CFG, d)
+    assert np.all(np.diff(np.asarray(amp)) < 0)
+
+
+def test_rayleigh_pdf_normalizes():
+    x = np.linspace(0, 30, 200_000)
+    pdf = np.asarray(wireless.rayleigh_pdf(CFG, jnp.asarray(x)))
+    assert np.isclose(np.trapezoid(pdf, x), 1.0, atol=1e-3)
+
+
+def test_moment_closed_forms_match_quadrature():
+    # ∫_β^∞ 2x³/Γ e^{-x²/Γ} dx and the x⁵ moment
+    g, b = CFG.rayleigh_gamma, CFG.fading_threshold
+    x = np.linspace(b, b + 40 * np.sqrt(g), 400_000)
+    m3_quad = np.trapezoid(2 * x**3 / g * np.exp(-x**2 / g), x)
+    m5_quad = np.trapezoid(2 * x**5 / g * np.exp(-x**2 / g), x)
+    assert np.isclose(float(wireless._moment_x3(CFG)), m3_quad, rtol=1e-4)
+    assert np.isclose(float(wireless._moment_x5(CFG)), m5_quad, rtol=1e-4)
+
+
+def test_lognormal_moment_matching_roundtrip():
+    mean, var = 3e-9, 4e-18
+    mu, sigma = wireless.lognormal_params(jnp.float32(mean), jnp.float32(var))
+    # log-normal mean/var from (mu, sigma)
+    m = np.exp(float(mu) + float(sigma) ** 2 / 2)
+    v = (np.exp(float(sigma) ** 2) - 1) * m**2
+    assert np.isclose(m, mean, rtol=1e-3)
+    assert np.isclose(v, var, rtol=1e-2)
+
+
+def test_lognormal_ccdf_limits():
+    mu, sigma = jnp.float32(-20.0), jnp.float32(1.0)
+    assert float(wireless.lognormal_ccdf(jnp.float32(-1.0), mu, sigma)) == 1.0
+    assert float(wireless.lognormal_ccdf(jnp.float32(1e9), mu, sigma)) < 1e-6
+
+
+def test_error_probability_bounds_and_monotonicity():
+    interferers = jnp.array([10.0, 15.0, 20.0, -1.0])
+    p_close = wireless.error_probability(CFG, jnp.float32(2.0), interferers, 10.0)
+    p_far = wireless.error_probability(CFG, jnp.float32(30.0), interferers, 10.0)
+    assert 0.0 <= float(p_close) <= 1.0
+    assert 0.0 <= float(p_far) <= 1.0
+    assert float(p_far) > float(p_close)      # farther link => worse
+    # monotone in γ_th (paper Fig 6b)
+    p_lo = wireless.error_probability(CFG, jnp.float32(10.0), interferers, 5.0)
+    p_hi = wireless.error_probability(CFG, jnp.float32(10.0), interferers, 15.0)
+    assert float(p_hi) >= float(p_lo)
+
+
+def test_error_probability_upper_bound_is_fading_mass():
+    # the paper's integral can't exceed P(fading >= β) = e^{-β²/Γ}
+    interferers = jnp.array([2.0, 2.0, 2.0])
+    p = wireless.error_probability(CFG, jnp.float32(49.0), interferers, 100.0)
+    bound = np.exp(-CFG.fading_threshold**2 / CFG.rayleigh_gamma)
+    assert float(p) <= bound + 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.floats(1.0, 60.0), gth=st.floats(1.0, 30.0))
+def test_error_probability_in_unit_interval(d, gth):
+    interferers = jnp.array([5.0, 12.0, 33.0])
+    p = wireless.error_probability(CFG, jnp.float32(d), interferers, gth)
+    assert 0.0 <= float(p) <= 1.0
+
+
+def test_more_interferers_more_error():
+    few = jnp.array([20.0, -1.0, -1.0, -1.0])
+    many = jnp.array([20.0, 8.0, 9.0, 10.0])
+    p_few = wireless.error_probability(CFG, jnp.float32(10.0), few, 10.0)
+    p_many = wireless.error_probability(CFG, jnp.float32(10.0), many, 10.0)
+    assert float(p_many) >= float(p_few)
+
+
+def test_selection_eps_monotone():
+    tpos = jnp.array([25.0, 25.0])
+    npos = jnp.asarray(np.random.default_rng(3).uniform(0, 50, (8, 2)))
+    n_sel = []
+    for eps in [0.01, 0.05, 0.1, 0.14]:
+        res = selection.select_neighbors(CFG, tpos, npos, eps=eps,
+                                         sinr_threshold=10.0)
+        n_sel.append(int(np.sum(np.asarray(res.selected))))
+    assert n_sel == sorted(n_sel)             # paper Fig 6a
+
+
+def test_selection_gamma_monotone():
+    tpos = jnp.array([25.0, 25.0])
+    npos = jnp.asarray(np.random.default_rng(4).uniform(0, 50, (10, 2)))
+    n_sel = []
+    for gth in [5.0, 10.0, 15.0]:
+        res = selection.select_neighbors(CFG, tpos, npos, eps=0.08,
+                                         sinr_threshold=gth)
+        n_sel.append(int(np.sum(np.asarray(res.selected))))
+    assert n_sel == sorted(n_sel, reverse=True)   # paper Fig 6b
+
+
+def test_link_success_mask_rates():
+    key = jax.random.PRNGKey(0)
+    p_err = jnp.full((20000,), 0.3)
+    ok = selection.link_success_mask(key, p_err)
+    assert abs(float(jnp.mean(ok)) - 0.7) < 0.02
+
+
+def test_ppp_positions_in_area():
+    key = jax.random.PRNGKey(1)
+    pos, valid = wireless.ppp_positions(key, CFG, 4e-3, 64)
+    assert pos.shape == (64, 2)
+    assert bool(jnp.all((pos >= 0) & (pos <= CFG.area_m)))
+    assert 1 <= int(jnp.sum(valid)) <= 64
