@@ -1,0 +1,181 @@
+"""JAX version-compatibility layer.
+
+The repo targets the modern sharding API (``jax.make_mesh(...,
+axis_types=...)``, ``jax.shard_map``, ``jax.set_mesh``,
+``jax.sharding.AxisType``) but must also run on jax 0.4.x, where none of
+those exist yet. Every module that needs one of these symbols imports it
+from here — **never** from ``jax``/``jax.sharding`` directly (ROADMAP
+policy) — so a jax upgrade or downgrade is a one-file change.
+
+Exports:
+  - ``AxisType``: the real enum on new jax, a structurally-identical
+    sentinel enum on old jax (so ``(AxisType.Auto,) * n`` always works).
+  - ``make_mesh(shape, axes, *, axis_types=None, devices=None)``
+  - ``set_mesh(mesh)``: context manager; ``jax.set_mesh`` on new jax, the
+    ``Mesh`` context manager on old jax.
+  - ``shard_map(f, *, mesh, in_specs, out_specs, axis_names, check_vma)``:
+    new-style keyword signature, lowered to
+    ``jax.experimental.shard_map.shard_map(..., auto=..., check_rep=...)``
+    on old jax (``axis_names`` = the manual axes; everything else stays
+    auto/partial).
+  - ``active_mesh()`` / ``active_mesh_axis_sizes()``: the mesh installed by
+    ``set_mesh`` (abstract mesh on new jax, thread-resources physical mesh
+    on old), or None/{} outside any mesh context.
+  - ``cost_analysis(compiled)``: dict on every version (0.4.x returns a
+    one-element list).
+  - feature probes: ``has_axis_types()``, ``has_new_shard_map()``,
+    ``has_set_mesh()``, ``jax_version``.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Any, Dict, Optional, Sequence, Set, Tuple
+
+import jax
+
+jax_version: Tuple[int, ...] = tuple(
+    int(p) for p in jax.__version__.split(".")[:3] if p.isdigit())
+
+
+# ------------------------------------------------------------ feature probes
+
+def has_axis_types() -> bool:
+    """True iff ``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg to
+    ``jax.make_mesh``) exist."""
+    return hasattr(jax.sharding, "AxisType")
+
+
+def has_new_shard_map() -> bool:
+    """True iff top-level ``jax.shard_map`` (axis_names/check_vma) exists."""
+    return hasattr(jax, "shard_map")
+
+
+def has_set_mesh() -> bool:
+    """True iff top-level ``jax.set_mesh`` exists."""
+    return hasattr(jax, "set_mesh")
+
+
+# ----------------------------------------------------------------- AxisType
+
+if has_axis_types():
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):           # type: ignore[no-redef]
+        """Sentinel mirroring ``jax.sharding.AxisType`` on jax without it.
+
+        Only ``Auto`` has meaning pre-sharding-in-types (every mesh axis is
+        implicitly auto); ``Explicit``/``Manual`` exist so code written
+        against the new enum imports cleanly."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+# --------------------------------------------------------------------- mesh
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              axis_types: Optional[Sequence[Any]] = None,
+              devices: Optional[Sequence[Any]] = None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` that tolerates old jax.
+
+    ``axis_types`` defaults to all-Auto; on jax without the kwarg the
+    argument is dropped (0.4.x meshes are all-auto by construction, so the
+    semantics are identical)."""
+    kwargs: Dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if has_axis_types():
+        if axis_types is None:
+            axis_types = (AxisType.Auto,) * len(tuple(axis_names))
+        kwargs["axis_types"] = tuple(axis_types)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def set_mesh(mesh: jax.sharding.Mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    New jax: ``jax.set_mesh(mesh)``. Old jax: the ``Mesh`` context manager,
+    which sets the thread-resources physical mesh that pjit-era
+    ``with_sharding_constraint(x, PartitionSpec)`` resolves against."""
+    if has_set_mesh():
+        return jax.set_mesh(mesh)
+    return mesh                          # Mesh is its own context manager
+
+
+def active_mesh() -> Optional[jax.sharding.Mesh]:
+    """The mesh installed by :func:`set_mesh`, or None outside any context.
+
+    Returns the abstract mesh on new jax and the thread-resources physical
+    mesh on old jax; an empty mesh is reported as None either way."""
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        mesh = get_abstract()
+        if mesh is None or getattr(mesh, "empty", False):
+            return None
+        return mesh
+    try:
+        from jax._src import mesh as mesh_lib
+        mesh = mesh_lib.thread_resources.env.physical_mesh
+    except Exception:
+        return None
+    if mesh is None or getattr(mesh, "empty", True):
+        return None
+    return mesh
+
+
+def active_mesh_axis_sizes() -> Dict[str, int]:
+    """{axis_name: size} for the active mesh, {} if none."""
+    mesh = active_mesh()
+    if mesh is None:
+        return {}
+    return mesh_axis_sizes(mesh)
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    """{axis_name: size} for an explicit (possibly abstract) mesh."""
+    try:
+        return dict(mesh.shape)
+    except Exception:
+        return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+# ---------------------------------------------------------------- shard_map
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Set[str]] = None,
+              check_vma: bool = True):
+    """New-style ``jax.shard_map`` signature on every jax version.
+
+    ``axis_names`` is the set of mesh axes the body is *manual* over
+    (partial-manual when it's a strict subset).
+
+    On old jax, partial-manual degrades to FULL-manual: 0.4.x's
+    ``auto=``-partial mode cannot SPMD-partition ``axis_index`` (XLA
+    "PartitionId instruction is not supported" abort), so the body is made
+    manual over every mesh axis instead. Inputs whose specs don't mention
+    the extra axes arrive replicated per device and the body computes them
+    redundantly — numerically identical, just without the auto-axis
+    distribution (sharding-constraint hints inside the body become no-ops).
+    """
+    if has_new_shard_map():
+        kwargs: Dict[str, Any] = {"mesh": mesh, "in_specs": in_specs,
+                                  "out_specs": out_specs,
+                                  "check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+    return _old_shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+# ------------------------------------------------------------ cost analysis
+
+def cost_analysis(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` as a flat dict on every version (jax
+    0.4.x returns a one-element list of dicts)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)

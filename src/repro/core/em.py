@@ -28,8 +28,14 @@ def posterior(pi: jax.Array, losses: jax.Array,
     logit = jnp.log(jnp.maximum(pi, 1e-30))[None, :] - losses
     lam = jax.nn.softmax(logit, axis=-1)
     if min_weight:
-        lam = jnp.maximum(lam, min_weight)
-        lam = lam / jnp.sum(lam, axis=-1, keepdims=True)
+        # affine map onto the {λ_m >= min_weight} sub-simplex: softmax rows
+        # sum to 1, so rows of (1 - M·w)·λ + w sum to 1 algebraically AND
+        # every entry is a true >= min_weight lower bound. (The previous
+        # clamp-then-renormalize could leave entries below min_weight after
+        # the renormalize step divided by a sum > 1.)
+        m = lam.shape[-1]
+        scale = max(1.0 - m * min_weight, 0.0)   # m·w >= 1 => uniform row
+        lam = lam * scale + (1.0 - scale) / m
     return lam
 
 

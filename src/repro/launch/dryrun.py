@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import TrainConfig, get_config, get_shape, list_archs
 from repro.configs.shapes import SHAPES
 from repro.launch import steps as steps_lib
@@ -47,7 +48,7 @@ DEFAULT_OUT = "experiments/dryrun"
 def _safe_spec(mesh, spec, shape):
     """Drop spec entries whose mesh axes don't divide the dim (e.g. B=1
     decode batches can't shard over "data")."""
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = compat.mesh_axis_sizes(mesh)
     out = []
     for i, entry in enumerate(spec):
         if entry is None or i >= len(shape):
@@ -83,7 +84,7 @@ def lower_combo(cfg, shape, mesh, *, multi_pod: bool, unroll: bool,
                 n_clients: int = 2):
     """Lower + compile one step for (cfg, shape) on mesh."""
     train = TrainConfig()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.mode == "train":
             specs = steps_lib.input_specs(cfg, shape)
             aparams = steps_lib.abstract_params(cfg)
@@ -149,7 +150,7 @@ def lower_combo(cfg, shape, mesh, *, multi_pod: bool, unroll: bool,
 
 
 def _costs(compiled) -> dict:
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis(compiled)
     coll = collective_bytes_from_hlo(compiled.as_text())
     return {"flops": cost.get("flops", 0.0),
             "bytes_accessed": cost.get("bytes accessed", 0.0),

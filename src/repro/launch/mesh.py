@@ -1,9 +1,12 @@
 """Production meshes. A FUNCTION (not a module-level constant) so importing
-this module never touches jax device state."""
+this module never touches jax device state.
+
+Mesh construction goes through ``repro.compat`` (never
+``jax.sharding.AxisType`` / ``jax.make_mesh(axis_types=...)`` directly) so
+the same code runs on jax 0.4.x and on sharding-in-types jax."""
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -12,11 +15,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     "pod" axis doubles as the pFedWN FL-client axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_debug_mesh(*, multi_pod: bool = False):
     """Small mesh for CI on 8 host devices."""
     shape = (2, 2, 2) if multi_pod else (2, 2)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
 from repro.core import em
 from repro.models import model as model_lib
@@ -263,7 +264,7 @@ def make_pfedwn_round_step(cfg: ModelConfig, train: TrainConfig,
     bspec = {k: P("pod", *([None] * v.ndim))
              for k, v in input_specs(cfg, shape).items()}
     mspec = {k: P() for k in ("loss", "xent", "aux", "mtp")}
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(pspec, bspec, P(None, None), P(None, None)),
         out_specs=(pspec, P(None, None), mspec),

@@ -26,6 +26,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import mesh_axis_sizes
+
 PyTree = Any
 
 _MATRIX_RULES: Dict[str, Tuple] = {
@@ -89,7 +91,7 @@ def _path_names(path) -> Tuple[str, ...]:
 def param_shardings(mesh, params_shape: PyTree, *, client_axis: bool = False
                     ) -> PyTree:
     """NamedShardings for an (abstract) params tree."""
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = mesh_axis_sizes(mesh)
 
     def leaf(path, leaf_shape):
         names = _path_names(path)
@@ -133,7 +135,7 @@ def cache_shardings(mesh, cache_shape: PyTree, *, pod_batch: bool = False
       ssm h:        (L, B, ..., N)    -> (None, data, model, ...)
       conv:         (L, B, K-1, C)    -> (None, data, None, model)
     """
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = mesh_axis_sizes(mesh)
     batch_axis = ("pod", "data") if pod_batch else "data"
 
     def div_ok(ax, dim):

@@ -1,0 +1,68 @@
+"""Vendored deterministic property-testing engine (`hypothesis`-shaped).
+
+The repo's property tests (`tests/test_em.py`, `test_properties.py`, …)
+are written against the real `hypothesis` API. Test environments for this
+repo are offline (ROADMAP test policy: no network at test time), so this
+package vendors the subset they need — `given`, `settings`,
+`strategies.*`, `hypothesis.extra.numpy.arrays` — with seeded PRNG case
+generation, a fixed per-test case budget, greedy shrinking, and
+counterexample reporting. See `repro.testing._engine` for the design.
+
+`install_as_hypothesis()` (called from `tests/conftest.py`) aliases this
+package into `sys.modules` under the `hypothesis` names **only when the
+real package is absent**, so `from hypothesis import given` resolves here
+offline and to the real engine wherever it's installed.
+"""
+from __future__ import annotations
+
+import importlib.util
+import sys
+
+from repro.testing._engine import (FailedHealthCheck, InvalidArgument,
+                                   SearchStrategy, UnsatisfiedAssumption,
+                                   assume, event, example, given, note,
+                                   reject, seed, settings, target)
+from repro.testing import extra, strategies
+
+__version__ = "0.1.0+repro.vendored"
+
+
+class HealthCheck:
+    """Parity sentinel set (`suppress_health_check=` accepts anything)."""
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    too_slow = "too_slow"
+    function_scoped_fixture = "function_scoped_fixture"
+
+    @classmethod
+    def all(cls):
+        return [cls.data_too_large, cls.filter_too_much, cls.too_slow,
+                cls.function_scoped_fixture]
+
+
+def install_as_hypothesis(*, force: bool = False) -> bool:
+    """Alias this package as `hypothesis` in ``sys.modules``.
+
+    Defers to a real installed `hypothesis` unless ``force`` is set.
+    Returns True iff the alias is (now) active. Idempotent."""
+    this = sys.modules[__name__]
+    current = sys.modules.get("hypothesis")
+    if current is not None:
+        return current is this or force and _bind(this)
+    if not force and importlib.util.find_spec("hypothesis") is not None:
+        return False
+    return _bind(this)
+
+
+def _bind(this) -> bool:
+    sys.modules["hypothesis"] = this
+    sys.modules["hypothesis.strategies"] = strategies
+    sys.modules["hypothesis.extra"] = extra
+    sys.modules["hypothesis.extra.numpy"] = extra.numpy
+    return True
+
+
+__all__ = ["FailedHealthCheck", "HealthCheck", "InvalidArgument",
+           "SearchStrategy", "UnsatisfiedAssumption", "assume", "event",
+           "example", "given", "install_as_hypothesis", "note", "reject",
+           "seed", "settings", "strategies", "target", "extra"]

@@ -1,0 +1,341 @@
+"""Core of the vendored deterministic property-testing engine.
+
+A dependency-free re-implementation of the slice of the `hypothesis` API
+this repo's property tests use. Design goals, in order:
+
+  1. **Deterministic**: the case sequence for a test is a pure function of
+     the test's qualified name, the case index, and an optional
+     ``REPRO_TESTING_SEED`` env override — identical across runs, machines
+     and processes, so CI failures reproduce locally by construction.
+  2. **Offline**: no network, no third-party packages (ROADMAP test
+     policy); only stdlib + numpy (already a repo dependency).
+  3. **Bounded**: a fixed per-test case budget (``settings.max_examples``)
+     and a fixed shrink budget — property tests can never wedge CI.
+
+The runner draws each case from a fresh ``random.Random`` seeded per
+(test, index); on failure it greedily shrinks one argument at a time and
+re-raises the *original* exception with a ``Falsifying example`` line
+appended, so plain ``assert``-based properties report counterexamples
+without a pytest plugin.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import os
+import random
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by ``assume(False)``: discard the current case, draw again."""
+
+
+class InvalidArgument(ValueError):
+    """Bad strategy construction arguments (mirrors hypothesis's)."""
+
+
+class FailedHealthCheck(Exception):
+    """Too many discarded cases (assume-heavy test with a tight filter)."""
+
+
+def assume(condition: Any) -> bool:
+    """Discard the current example unless ``condition`` is truthy."""
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+def reject() -> None:
+    """Unconditionally discard the current example."""
+    raise UnsatisfiedAssumption()
+
+
+def note(message: str) -> None:        # parity no-op (we don't keep a report)
+    pass
+
+
+def event(message: str) -> None:       # parity no-op
+    pass
+
+
+def target(observation: float, *, label: str = "") -> float:
+    return observation                 # parity no-op
+
+
+# --------------------------------------------------------------- strategies
+
+class SearchStrategy:
+    """Base strategy: ``do_draw(rng)`` produces a value, ``do_shrink(v)``
+    yields strictly-simpler candidates (may be empty)."""
+
+    def do_draw(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+    def do_shrink(self, value: Any) -> Iterator[Any]:
+        return iter(())
+
+    # hypothesis-compatible combinators
+    def map(self, pack: Callable[[Any], Any]) -> "SearchStrategy":
+        return MappedStrategy(self, pack)
+
+    def filter(self, condition: Callable[[Any], bool]) -> "SearchStrategy":
+        return FilteredStrategy(self, condition)
+
+    def __or__(self, other: "SearchStrategy") -> "SearchStrategy":
+        return OneOfStrategy([self, other])
+
+    def example(self) -> Any:
+        """A deterministic example (debugging helper, like hypothesis's)."""
+        return self.do_draw(random.Random(0))
+
+
+class MappedStrategy(SearchStrategy):
+    def __init__(self, base: SearchStrategy, pack: Callable):
+        self.base, self.pack = base, pack
+
+    def do_draw(self, rng):
+        return self.pack(self.base.do_draw(rng))
+
+    def __repr__(self):
+        return f"{self.base!r}.map({getattr(self.pack, '__name__', '…')})"
+
+
+class FilteredStrategy(SearchStrategy):
+    _MAX_TRIES = 100
+
+    def __init__(self, base: SearchStrategy, condition: Callable):
+        self.base, self.condition = base, condition
+
+    def do_draw(self, rng):
+        for _ in range(self._MAX_TRIES):
+            value = self.base.do_draw(rng)
+            if self.condition(value):
+                return value
+        raise UnsatisfiedAssumption()
+
+    def do_shrink(self, value):
+        return (v for v in self.base.do_shrink(value) if self.condition(v))
+
+    def __repr__(self):
+        return f"{self.base!r}.filter(...)"
+
+
+class OneOfStrategy(SearchStrategy):
+    def __init__(self, options: List[SearchStrategy]):
+        flat: List[SearchStrategy] = []
+        for o in options:
+            flat.extend(o.options if isinstance(o, OneOfStrategy) else [o])
+        if not flat:
+            raise InvalidArgument("one_of requires at least one strategy")
+        self.options = flat
+
+    def do_draw(self, rng):
+        return rng.choice(self.options).do_draw(rng)
+
+    def __repr__(self):
+        return "one_of(%s)" % ", ".join(map(repr, self.options))
+
+
+# ----------------------------------------------------------------- settings
+
+_ENV_SEED = "REPRO_TESTING_SEED"
+_ENV_MAX_EXAMPLES = "REPRO_TESTING_MAX_EXAMPLES"
+
+
+class settings:
+    """Per-test knobs. Usable as a decorator (``@settings(...)``) above or
+    below ``@given``; ``deadline`` is accepted for API parity and ignored
+    (determinism makes wall-clock deadlines pure flake)."""
+
+    DEFAULT_MAX_EXAMPLES = 50
+
+    def __init__(self, max_examples: Optional[int] = None,
+                 deadline: Any = None, derandomize: bool = True,
+                 max_shrinks: int = 100, print_blob: bool = False,
+                 database: Any = None, phases: Any = None,
+                 suppress_health_check: Any = (), verbosity: Any = None):
+        self.max_examples = (self.DEFAULT_MAX_EXAMPLES
+                             if max_examples is None else int(max_examples))
+        self.deadline = deadline
+        self.derandomize = derandomize
+        self.max_shrinks = max_shrinks
+
+    def __call__(self, fn: Callable) -> Callable:
+        fn._repro_settings = self
+        return fn
+
+    def effective_max_examples(self) -> int:
+        """The per-test budget, clamped by the env-level cap (CI can dial
+        the whole suite down with one variable)."""
+        cap = os.environ.get(_ENV_MAX_EXAMPLES)
+        n = self.max_examples
+        if cap:
+            n = min(n, max(1, int(cap)))
+        return n
+
+
+def seed(value: int) -> Callable:
+    """Pin a test's base seed (normally derived from its qualname)."""
+    def attach(fn):
+        fn._repro_seed = int(value)
+        return fn
+    return attach
+
+
+def example(*args, **kwargs) -> Callable:
+    """Register an explicit example, run before generated ones."""
+    def attach(fn):
+        existing = getattr(fn, "_repro_examples", [])
+        fn._repro_examples = [(args, kwargs)] + existing
+        return fn
+    return attach
+
+
+# ------------------------------------------------------------------- runner
+
+def _base_seed(fn: Callable) -> int:
+    pinned = getattr(fn, "_repro_seed", None)
+    if pinned is not None:
+        return pinned
+    env = os.environ.get(_ENV_SEED, "0")
+    name = f"{fn.__module__}.{getattr(fn, '__qualname__', fn.__name__)}"
+    digest = hashlib.md5(f"{env}:{name}".encode()).digest()
+    return int.from_bytes(digest[:8], "big")
+
+
+def _case_rng(base: int, index: int) -> random.Random:
+    return random.Random((base * 1_000_003 + index) & 0xFFFFFFFFFFFFFFFF)
+
+
+def _format_example(kwargs: Dict[str, Any]) -> str:
+    def fmt(v):
+        r = repr(v)
+        return r if len(r) <= 500 else r[:500] + "…"
+    return ", ".join(f"{k}={fmt(v)}" for k, v in kwargs.items())
+
+
+def _attach_counterexample(exc: BaseException, fn_name: str,
+                           kwargs: Dict[str, Any]) -> None:
+    line = f"Falsifying example: {fn_name}({_format_example(kwargs)})"
+    try:
+        if exc.args and isinstance(exc.args[0], str):
+            exc.args = (f"{exc.args[0]}\n{line}",) + exc.args[1:]
+        else:
+            exc.args = exc.args + (line,)
+    except Exception:
+        pass                           # exotic exception; report is printed
+
+
+def _shrink(fn: Callable, fixed_kwargs: Dict[str, Any],
+            strategies: Dict[str, SearchStrategy],
+            failing: Dict[str, Any], exc_type: type,
+            budget: int) -> Dict[str, Any]:
+    """Greedy one-argument-at-a-time shrink: adopt any simpler candidate
+    that still raises the same exception type, until fixpoint/budget."""
+
+    def still_fails(candidate: Dict[str, Any]) -> bool:
+        try:
+            fn(**fixed_kwargs, **candidate)
+        except UnsatisfiedAssumption:
+            return False
+        except exc_type:
+            return True
+        except Exception:
+            return False               # different bug — don't chase it
+        return False
+
+    current = dict(failing)
+    spent = 0
+    improved = True
+    while improved and spent < budget:
+        improved = False
+        for name, strat in strategies.items():
+            for candidate in strat.do_shrink(current[name]):
+                spent += 1
+                if spent >= budget:
+                    break
+                trial = dict(current, **{name: candidate})
+                if still_fails(trial):
+                    current = trial
+                    improved = True
+                    break
+    return current
+
+
+def given(*given_args: SearchStrategy, **given_kwargs: SearchStrategy):
+    """The `hypothesis.given` decorator: run the test once per generated
+    case. Positional strategies map to the test's *last* parameters (as in
+    hypothesis); keyword strategies to the same-named parameters."""
+    if not given_args and not given_kwargs:
+        raise InvalidArgument("given() requires at least one strategy")
+    for s in list(given_args) + list(given_kwargs.values()):
+        if not isinstance(s, SearchStrategy):
+            raise InvalidArgument(f"not a strategy: {s!r}")
+
+    def decorator(fn: Callable) -> Callable:
+        sig = inspect.signature(fn)
+        param_names = list(sig.parameters)
+        strategies = dict(given_kwargs)
+        if given_args:
+            tail = param_names[len(param_names) - len(given_args):]
+            strategies.update(dict(zip(tail, given_args)))
+        unknown = set(strategies) - set(param_names)
+        if unknown:
+            raise InvalidArgument(f"strategies for unknown parameters: "
+                                  f"{sorted(unknown)}")
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            st = (getattr(wrapper, "_repro_settings", None)
+                  or getattr(fn, "_repro_settings", None) or settings())
+            n_examples = st.effective_max_examples()
+            base = _base_seed(fn)
+            fixed = dict(kwargs)       # pytest fixtures / outer args
+            if args:
+                fixed.update(dict(zip(param_names, args)))
+
+            for ex_args, ex_kwargs in getattr(fn, "_repro_examples", []):
+                fn(*ex_args, **fixed, **ex_kwargs)
+
+            executed = 0
+            attempts = 0
+            max_attempts = n_examples * 10
+            while executed < n_examples and attempts < max_attempts:
+                rng = _case_rng(base, attempts)
+                attempts += 1
+                try:
+                    drawn = {k: s.do_draw(rng)
+                             for k, s in strategies.items()}
+                except UnsatisfiedAssumption:
+                    continue
+                try:
+                    fn(**fixed, **drawn)
+                except UnsatisfiedAssumption:
+                    continue
+                except Exception as e:
+                    shrunk = _shrink(fn, fixed, strategies, drawn, type(e),
+                                     st.max_shrinks)
+                    try:
+                        fn(**fixed, **shrunk)
+                        final, final_exc = drawn, e
+                    except Exception as e2:
+                        final, final_exc = shrunk, e2
+                    _attach_counterexample(final_exc, fn.__name__, final)
+                    raise final_exc
+                executed += 1
+            if executed == 0:
+                raise FailedHealthCheck(
+                    f"{fn.__name__}: every generated case was discarded "
+                    f"by assume()/filter() ({attempts} attempts)")
+
+        # pytest must not mistake strategy-fed parameters for fixtures
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategies])
+        wrapper.is_hypothesis_test = True
+        wrapper._repro_strategies = strategies
+        return wrapper
+
+    return decorator

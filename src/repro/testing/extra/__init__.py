@@ -1,0 +1,4 @@
+"""``hypothesis.extra``-shaped namespace for the vendored engine."""
+from repro.testing.extra import numpy  # noqa: F401  (submodule attribute)
+
+__all__ = ["numpy"]

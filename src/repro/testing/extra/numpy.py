@@ -1,0 +1,125 @@
+"""The ``hypothesis.extra.numpy`` surface: ``arrays`` + ``array_shapes``.
+
+Values are drawn element-wise from the ``elements`` strategy through the
+same seeded ``random.Random`` as every other strategy, so array cases are
+exactly as deterministic as scalar ones.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.testing._engine import (InvalidArgument, SearchStrategy,
+                                   UnsatisfiedAssumption)
+from repro.testing import strategies as st
+
+
+def array_shapes(*, min_dims: int = 1, max_dims: Optional[int] = None,
+                 min_side: int = 1, max_side: Optional[int] = None
+                 ) -> SearchStrategy:
+    """Strategy of shape tuples."""
+    if max_dims is None:
+        max_dims = min_dims + 2
+    if max_side is None:
+        max_side = min_side + 5
+    if min_dims > max_dims or min_side > max_side:
+        raise InvalidArgument("array_shapes: min > max")
+    return st.lists(st.integers(min_side, max_side),
+                    min_size=min_dims, max_size=max_dims).map(tuple)
+
+
+def _default_elements(dtype: np.dtype) -> SearchStrategy:
+    if dtype.kind == "f":
+        return st.floats(-1e6, 1e6,
+                         width=min(dtype.itemsize * 8, 64))
+    if dtype.kind in "iu":
+        info = np.iinfo(dtype)
+        return st.integers(int(info.min), int(info.max))
+    if dtype.kind == "b":
+        return st.booleans()
+    if dtype.kind == "c":
+        return st.tuples(st.floats(-1e3, 1e3), st.floats(-1e3, 1e3)).map(
+            lambda t: complex(*t))
+    raise InvalidArgument(f"no default elements strategy for dtype {dtype}")
+
+
+class ArraysStrategy(SearchStrategy):
+    def __init__(self, dtype, shape, *, elements=None, fill=None,
+                 unique: bool = False):
+        self.dtype = np.dtype(dtype)
+        if isinstance(shape, SearchStrategy):
+            self.shape: Union[SearchStrategy, tuple] = shape
+        elif isinstance(shape, (int, np.integer)):
+            self.shape = (int(shape),)
+        else:
+            self.shape = tuple(int(s) for s in shape)
+        if isinstance(elements, dict):
+            elements = st.floats(**elements) if self.dtype.kind == "f" \
+                else st.integers(**elements)
+        self.elements = elements if elements is not None \
+            else _default_elements(self.dtype)
+        self.fill = fill
+        self.unique = unique
+
+    def _draw_shape(self, rng) -> tuple:
+        if isinstance(self.shape, SearchStrategy):
+            return tuple(self.shape.do_draw(rng))
+        return self.shape
+
+    def do_draw(self, rng) -> np.ndarray:
+        shape = self._draw_shape(rng)
+        n = int(np.prod(shape)) if shape else 1
+        if self.fill is not None and n:
+            flat = [self.fill.do_draw(rng)] * n
+        else:
+            flat = [self.elements.do_draw(rng) for _ in range(n)]
+        if self.unique:
+            seen, uniq = set(), []
+            budget = n * 20
+            while len(uniq) < n and budget:
+                budget -= 1
+                v = flat[len(uniq)] if len(uniq) < len(flat) \
+                    else self.elements.do_draw(rng)
+                if v not in seen:
+                    seen.add(v)
+                    uniq.append(v)
+                else:
+                    flat = flat[:len(uniq)] \
+                        + [self.elements.do_draw(rng)] \
+                        + flat[len(uniq) + 1:]
+            if len(uniq) < n:
+                raise UnsatisfiedAssumption()
+            flat = uniq
+        arr = np.asarray(flat, dtype=self.dtype)
+        return arr.reshape(shape)
+
+    def do_shrink(self, value: np.ndarray):
+        # simplest first: all-zeros of the same shape, then zero a prefix
+        if value.size and np.any(value != 0):
+            yield np.zeros_like(value)
+            half = value.copy().reshape(-1)
+            half[:max(1, half.size // 2)] = 0
+            yield half.reshape(value.shape)
+
+    def __repr__(self):
+        return f"arrays({self.dtype}, {self.shape})"
+
+
+def arrays(dtype, shape, *, elements=None, fill=None,
+           unique: bool = False) -> SearchStrategy:
+    """``hypothesis.extra.numpy.arrays``: dtype is a numpy dtype (not a
+    strategy); shape is an int, a tuple, or a shape strategy
+    (``array_shapes``); elements is a strategy or a floats()/integers()
+    kwargs dict."""
+    return ArraysStrategy(dtype, shape, elements=elements, fill=fill,
+                          unique=unique)
+
+
+def from_dtype(dtype) -> SearchStrategy:
+    """Strategy of scalars of ``dtype`` (minimal parity helper)."""
+    return _default_elements(np.dtype(dtype)).map(
+        lambda v: np.dtype(dtype).type(v))
+
+
+__all__ = ["array_shapes", "arrays", "from_dtype"]

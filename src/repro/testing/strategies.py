@@ -1,0 +1,396 @@
+"""Strategy constructors (the ``hypothesis.strategies`` surface).
+
+Each strategy draws from a per-case ``random.Random`` handed down by the
+runner, so generation is deterministic end-to-end. Bounded numeric
+strategies occasionally emit boundary values (min/max/zero) — the cheap
+version of hypothesis's edge-case bias.
+"""
+from __future__ import annotations
+
+import math
+import random
+import string
+from typing import Callable, Iterator, List, Optional, Sequence
+
+from repro.testing._engine import (InvalidArgument, OneOfStrategy,
+                                   SearchStrategy, UnsatisfiedAssumption)
+
+_EDGE_PROB = 0.08                       # chance a draw returns a boundary
+
+
+def _shrink_numeric_towards(value, target) -> Iterator:
+    """target, then successive halvings of the distance — strictly simpler
+    candidates only."""
+    if value == target:
+        return
+    yield target
+    mid = value
+    for _ in range(16):
+        mid = (mid + target) / 2 if isinstance(value, float) else \
+            target + (mid - target) // 2
+        if mid == target or mid == value:
+            break
+        yield type(value)(mid)
+
+
+# ---------------------------------------------------------------- numerics
+
+class IntegersStrategy(SearchStrategy):
+    def __init__(self, min_value: Optional[int] = None,
+                 max_value: Optional[int] = None):
+        if (min_value is not None and max_value is not None
+                and min_value > max_value):
+            raise InvalidArgument(f"integers({min_value}, {max_value}): "
+                                  "min_value > max_value")
+        self.min_value, self.max_value = min_value, max_value
+
+    def _edges(self) -> List[int]:
+        edges = []
+        if self.min_value is not None:
+            edges.append(self.min_value)
+        if self.max_value is not None:
+            edges.append(self.max_value)
+        lo = self.min_value if self.min_value is not None else -1
+        hi = self.max_value if self.max_value is not None else 1
+        if lo <= 0 <= hi:
+            edges.append(0)
+        return edges
+
+    def do_draw(self, rng: random.Random) -> int:
+        edges = self._edges()
+        if edges and rng.random() < _EDGE_PROB:
+            return rng.choice(edges)
+        lo, hi = self.min_value, self.max_value
+        if lo is not None and hi is not None:
+            return rng.randint(lo, hi)
+        # one- or no-sided: favour small magnitudes, occasionally go big
+        r = rng.random()
+        mag = (rng.randint(0, 20) if r < 0.5 else
+               rng.randint(0, 10_000) if r < 0.9 else
+               rng.randint(0, 2**31))
+        if lo is not None:
+            return lo + mag
+        if hi is not None:
+            return hi - mag
+        return mag if rng.random() < 0.5 else -mag
+
+    def do_shrink(self, value: int) -> Iterator[int]:
+        target = 0
+        if self.min_value is not None and target < self.min_value:
+            target = self.min_value
+        if self.max_value is not None and target > self.max_value:
+            target = self.max_value
+        yield from _shrink_numeric_towards(value, target)
+        # single step toward the target: lets the greedy shrinker walk the
+        # last stretch to an exact failure boundary after halving stalls
+        step = value - 1 if value > target else value + 1
+        if step != target and step != value:
+            yield step
+
+    def __repr__(self):
+        return f"integers({self.min_value}, {self.max_value})"
+
+
+def _to_width(x: float, width: int) -> float:
+    if width == 64:
+        return float(x)
+    if width == 32:
+        import struct
+        return struct.unpack("f", struct.pack("f", x))[0]
+    if width == 16:
+        import struct
+        return struct.unpack("e", struct.pack("e", x))[0]
+    raise InvalidArgument(f"floats width must be 16/32/64, got {width}")
+
+
+class FloatsStrategy(SearchStrategy):
+    def __init__(self, min_value: Optional[float] = None,
+                 max_value: Optional[float] = None, *,
+                 allow_nan: Optional[bool] = None,
+                 allow_infinity: Optional[bool] = None,
+                 allow_subnormal: Optional[bool] = None,
+                 width: int = 64, exclude_min: bool = False,
+                 exclude_max: bool = False):
+        bounded = min_value is not None or max_value is not None
+        if allow_nan and bounded:
+            raise InvalidArgument("allow_nan=True with bounds")
+        self.min_value = None if min_value is None else float(min_value)
+        self.max_value = None if max_value is None else float(max_value)
+        if (self.min_value is not None and self.max_value is not None
+                and self.min_value > self.max_value):
+            raise InvalidArgument(f"floats({min_value}, {max_value}): "
+                                  "min_value > max_value")
+        self.allow_nan = (not bounded) if allow_nan is None else allow_nan
+        self.allow_infinity = ((not bounded) if allow_infinity is None
+                               else allow_infinity)
+        self.width = width
+        self.exclude_min, self.exclude_max = exclude_min, exclude_max
+
+    def _clamp(self, x: float) -> float:
+        x = _to_width(x, self.width)
+        if self.min_value is not None and x < self.min_value:
+            x = self.min_value
+        if self.max_value is not None and x > self.max_value:
+            x = self.max_value
+        if self.exclude_min and x == self.min_value:
+            x = math.nextafter(x, math.inf)
+        if self.exclude_max and x == self.max_value:
+            x = math.nextafter(x, -math.inf)
+        return x
+
+    def do_draw(self, rng: random.Random) -> float:
+        lo, hi = self.min_value, self.max_value
+        special: List[float] = []
+        if self.allow_nan:
+            special.append(math.nan)
+        if self.allow_infinity:
+            special += [math.inf, -math.inf]
+        if special and rng.random() < _EDGE_PROB / 2:
+            return rng.choice(special)
+        edges = [e for e in (lo, hi, 0.0)
+                 if e is not None
+                 and (lo is None or e >= lo) and (hi is None or e <= hi)]
+        if edges and rng.random() < _EDGE_PROB:
+            return self._clamp(rng.choice(edges))
+        if lo is not None and hi is not None:
+            return self._clamp(lo + (hi - lo) * rng.random())
+        scale = 10.0 ** rng.randint(-3, 6)
+        x = rng.uniform(-scale, scale)
+        if lo is not None:
+            x = lo + abs(x)
+        elif hi is not None:
+            x = hi - abs(x)
+        return self._clamp(x)
+
+    def do_shrink(self, value: float) -> Iterator[float]:
+        if isinstance(value, float) and math.isnan(value):
+            return
+        target = 0.0
+        if self.min_value is not None and target < self.min_value:
+            target = self.min_value
+        if self.max_value is not None and target > self.max_value:
+            target = self.max_value
+        seen = set()
+        for c in _shrink_numeric_towards(value, target):
+            c = self._clamp(c)
+            if c not in seen and c != value:
+                seen.add(c)
+                yield c
+
+    def __repr__(self):
+        return f"floats({self.min_value}, {self.max_value})"
+
+
+class BooleansStrategy(SearchStrategy):
+    def do_draw(self, rng):
+        return rng.random() < 0.5
+
+    def do_shrink(self, value):
+        if value:
+            yield False
+
+    def __repr__(self):
+        return "booleans()"
+
+
+# -------------------------------------------------------------- containers
+
+class SampledFromStrategy(SearchStrategy):
+    def __init__(self, elements: Sequence):
+        self.elements = list(elements)
+        if not self.elements:
+            raise InvalidArgument("sampled_from requires a non-empty "
+                                  "sequence")
+
+    def do_draw(self, rng):
+        return rng.choice(self.elements)
+
+    def do_shrink(self, value):
+        # earlier elements are "simpler", as in hypothesis
+        try:
+            idx = self.elements.index(value)
+        except ValueError:
+            return
+        for i in range(min(idx, 3)):
+            yield self.elements[i]
+
+    def __repr__(self):
+        return f"sampled_from({self.elements!r})"
+
+
+class ListsStrategy(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, *, min_size: int = 0,
+                 max_size: Optional[int] = None, unique: bool = False,
+                 unique_by: Optional[Callable] = None):
+        if not isinstance(elements, SearchStrategy):
+            raise InvalidArgument(f"lists() elements must be a strategy, "
+                                  f"got {elements!r}")
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = (self.min_size + 10 if max_size is None
+                         else int(max_size))
+        if self.min_size > self.max_size:
+            raise InvalidArgument("lists(): min_size > max_size")
+        self.unique_by = unique_by or ((lambda x: x) if unique else None)
+
+    def do_draw(self, rng):
+        size = rng.randint(self.min_size, self.max_size)
+        out: List = []
+        if self.unique_by is None:
+            return [self.elements.do_draw(rng) for _ in range(size)]
+        seen = set()
+        for _ in range(size * 20):
+            if len(out) >= size:
+                break
+            v = self.elements.do_draw(rng)
+            k = self.unique_by(v)
+            if k not in seen:
+                seen.add(k)
+                out.append(v)
+        if len(out) < self.min_size:
+            raise UnsatisfiedAssumption()
+        return out
+
+    def do_shrink(self, value):
+        n = len(value)
+        if n > self.min_size:
+            yield value[:self.min_size]           # smallest size first
+            if n - 1 >= self.min_size:
+                for i in range(n):                # drop one element
+                    yield value[:i] + value[i + 1:]
+        for i, v in enumerate(value):             # shrink one element
+            for c in self.elements.do_shrink(v):
+                yield value[:i] + [c] + value[i + 1:]
+                break
+
+    def __repr__(self):
+        return (f"lists({self.elements!r}, min_size={self.min_size}, "
+                f"max_size={self.max_size})")
+
+
+class TuplesStrategy(SearchStrategy):
+    def __init__(self, *strategies: SearchStrategy):
+        self.strategies = strategies
+
+    def do_draw(self, rng):
+        return tuple(s.do_draw(rng) for s in self.strategies)
+
+    def do_shrink(self, value):
+        for i, (s, v) in enumerate(zip(self.strategies, value)):
+            for c in s.do_shrink(v):
+                yield value[:i] + (c,) + value[i + 1:]
+                break
+
+    def __repr__(self):
+        return "tuples(%s)" % ", ".join(map(repr, self.strategies))
+
+
+class JustStrategy(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def do_draw(self, rng):
+        return self.value
+
+    def __repr__(self):
+        return f"just({self.value!r})"
+
+
+class TextStrategy(SearchStrategy):
+    def __init__(self, alphabet: Optional[str] = None, *, min_size: int = 0,
+                 max_size: Optional[int] = None):
+        self.alphabet = alphabet or (string.ascii_letters + string.digits
+                                     + " _-")
+        self.min_size = int(min_size)
+        self.max_size = (self.min_size + 20 if max_size is None
+                         else int(max_size))
+
+    def do_draw(self, rng):
+        size = rng.randint(self.min_size, self.max_size)
+        return "".join(rng.choice(self.alphabet) for _ in range(size))
+
+    def do_shrink(self, value):
+        if len(value) > self.min_size:
+            yield value[:self.min_size]
+
+    def __repr__(self):
+        return "text()"
+
+
+# ---------------------------------------------------------------- composite
+
+class CompositeStrategy(SearchStrategy):
+    def __init__(self, definition: Callable, args, kwargs):
+        self.definition, self.args, self.kwargs = definition, args, kwargs
+
+    def do_draw(self, rng):
+        def draw(strategy: SearchStrategy):
+            if not isinstance(strategy, SearchStrategy):
+                raise InvalidArgument(f"draw() needs a strategy, got "
+                                      f"{strategy!r}")
+            return strategy.do_draw(rng)
+
+        return self.definition(draw, *self.args, **self.kwargs)
+
+    def __repr__(self):
+        return f"composite({self.definition.__name__})"
+
+
+def composite(definition: Callable) -> Callable:
+    """``@st.composite``: the wrapped function receives ``draw`` plus its
+    own arguments and returns a value; calling it returns a strategy."""
+    def builder(*args, **kwargs) -> CompositeStrategy:
+        return CompositeStrategy(definition, args, kwargs)
+    builder.__name__ = getattr(definition, "__name__", "composite")
+    return builder
+
+
+# -------------------------------------------------------------- public API
+
+def integers(min_value: Optional[int] = None,
+             max_value: Optional[int] = None) -> SearchStrategy:
+    return IntegersStrategy(min_value, max_value)
+
+
+def floats(min_value: Optional[float] = None,
+           max_value: Optional[float] = None, **kwargs) -> SearchStrategy:
+    return FloatsStrategy(min_value, max_value, **kwargs)
+
+
+def booleans() -> SearchStrategy:
+    return BooleansStrategy()
+
+
+def lists(elements: SearchStrategy, **kwargs) -> SearchStrategy:
+    return ListsStrategy(elements, **kwargs)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return TuplesStrategy(*strategies)
+
+
+def sampled_from(elements: Sequence) -> SearchStrategy:
+    return SampledFromStrategy(elements)
+
+
+def just(value) -> SearchStrategy:
+    return JustStrategy(value)
+
+
+def none() -> SearchStrategy:
+    return JustStrategy(None)
+
+
+def one_of(*strategies) -> SearchStrategy:
+    if len(strategies) == 1 and isinstance(strategies[0], (list, tuple)):
+        strategies = tuple(strategies[0])
+    return OneOfStrategy(list(strategies))
+
+
+def text(alphabet: Optional[str] = None, **kwargs) -> SearchStrategy:
+    return TextStrategy(alphabet, **kwargs)
+
+
+__all__ = ["SearchStrategy", "booleans", "composite", "floats", "integers",
+           "just", "lists", "none", "one_of", "sampled_from", "text",
+           "tuples"]

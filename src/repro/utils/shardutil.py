@@ -13,6 +13,8 @@ from typing import Optional, Tuple, Union
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 AxisName = Union[str, Tuple[str, ...], None]
 
 # set while tracing inside the partial-manual (pod) shard_map: some SPMD
@@ -37,27 +39,15 @@ def in_manual_pod() -> bool:
 
 
 def _active_axis_names():
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return ()
-    if mesh is None or getattr(mesh, "empty", False):
+    mesh = compat.active_mesh()
+    if mesh is None:
         return ()
     return tuple(mesh.axis_names)
 
 
 def mesh_axis_sizes() -> dict:
     """{axis_name: size} for the active (abstract) mesh, {} if none."""
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return {}
-    if mesh is None or getattr(mesh, "empty", False):
-        return {}
-    try:
-        return dict(mesh.shape)
-    except Exception:
-        return dict(zip(mesh.axis_names, mesh.axis_sizes))
+    return compat.active_mesh_axis_sizes()
 
 
 def shard_heads(x, head_axis: int = 2):
@@ -82,6 +72,12 @@ def shard_heads(x, head_axis: int = 2):
 
 
 def logical_shard(x, *spec: AxisName):
+    if _MANUAL_POD and not compat.has_new_shard_map():
+        # old jax lowers the pod round as a FULL-manual shard_map (compat
+        # can't do partial-manual there), so every mesh axis is manual in
+        # the body and any with_sharding_constraint naming one fails at
+        # lowering (not at trace time, where we could catch it)
+        return x
     names = _active_axis_names()
     if not names:
         return x

@@ -1,6 +1,7 @@
 """End-to-end behaviour tests for the paper's system: small-mesh sharded
 lowering (the CI analogue of the 512-device dry-run), the pod-axis
 production aggregation, and analytic/actual consistency checks."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -14,10 +15,14 @@ from repro.utils import param_count
 
 
 def _run(code: str, timeout: int = 600) -> str:
+    # pin the backend: the snippets force host (CPU) devices, and without
+    # JAX_PLATFORMS a libtpu install stalls for minutes probing GCP
+    # metadata for TPU hardware that isn't there
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                        capture_output=True, text=True, timeout=timeout,
-                       cwd="/root/repo",
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       cwd="/root/repo", env=env)
     assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
     return r.stdout
 
@@ -29,22 +34,22 @@ def test_pod_mix_matches_reference():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P, AxisType
+        from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.core.aggregation import pod_mix
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
+        mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
         C = 2
         params = {"w": jnp.arange(C * 4, dtype=jnp.float32).reshape(C, 4)}
         pi = jnp.array([[0.0, 1.0], [1.0, 0.0]])
         ok = jnp.ones((C, C), bool)
 
-        f = jax.shard_map(
+        f = compat.shard_map(
             lambda p: pod_mix(p, pi, 0.5, ok),
             mesh=mesh, in_specs=({"w": P("pod", None)},),
             out_specs={"w": P("pod", None)},
             axis_names={"pod"}, check_vma=False)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             out = jax.jit(f)(params)["w"]
         w = np.arange(C * 4, dtype=np.float32).reshape(C, 4)
         np.testing.assert_allclose(np.asarray(out[0]), 0.5 * w[0] + 0.5 * w[1],
@@ -61,20 +66,20 @@ def test_pod_mix_erasure_keeps_local():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P, AxisType
+        from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.core.aggregation import pod_mix
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
+        mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
         params = {"w": jnp.arange(8, dtype=jnp.float32).reshape(2, 4)}
         pi = jnp.full((2, 2), 0.5)
         ok = jnp.zeros((2, 2), bool)            # all links erased
 
-        f = jax.shard_map(lambda p: pod_mix(p, pi, 0.3, ok), mesh=mesh,
-                          in_specs=({"w": P("pod", None)},),
-                          out_specs={"w": P("pod", None)},
-                          axis_names={"pod"}, check_vma=False)
-        with jax.set_mesh(mesh):
+        f = compat.shard_map(lambda p: pod_mix(p, pi, 0.3, ok), mesh=mesh,
+                             in_specs=({"w": P("pod", None)},),
+                             out_specs={"w": P("pod", None)},
+                             axis_names={"pod"}, check_vma=False)
+        with compat.set_mesh(mesh):
             out = jax.jit(f)(params)["w"]
         np.testing.assert_allclose(np.asarray(out),
                                    np.arange(8, dtype=np.float32).reshape(2, 4),
@@ -92,6 +97,7 @@ def test_small_mesh_dryrun_train_and_decode():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
         from repro.configs import get_config, TrainConfig
         from repro.configs.base import ShapeConfig
         from repro.launch import steps as steps_lib
@@ -102,7 +108,7 @@ def test_small_mesh_dryrun_train_and_decode():
         mesh = make_debug_mesh()
         train_shape = ShapeConfig("t", seq_len=64, global_batch=4, mode="train")
         dec_shape = ShapeConfig("d", seq_len=64, global_batch=4, mode="decode")
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             ap = steps_lib.abstract_params(cfg)
             ps = param_shardings(mesh, ap)
             specs = steps_lib.input_specs(cfg, train_shape)
@@ -112,7 +118,7 @@ def test_small_mesh_dryrun_train_and_decode():
                                              grad_shardings=ps)
             co = jax.jit(step, in_shardings=(ps, bs),
                          out_shardings=(ps, None)).lower(ap, specs).compile()
-            assert co.cost_analysis().get("flops", 0) > 0
+            assert compat.cost_analysis(co).get("flops", 0) > 0
             ac = steps_lib.abstract_cache(cfg, dec_shape)
             cs = cache_shardings(mesh, ac)
             dspecs = steps_lib.input_specs(cfg, dec_shape)
@@ -133,6 +139,7 @@ def test_small_mesh_pfedwn_round_multipod():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
         from repro.configs import get_config, TrainConfig
         from repro.configs.base import ShapeConfig
         from repro.launch import steps as steps_lib
@@ -143,7 +150,7 @@ def test_small_mesh_pfedwn_round_multipod():
         mesh = make_debug_mesh(multi_pod=True)
         shape = ShapeConfig("t", seq_len=64, global_batch=4, mode="train")
         C = 2
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             ap = steps_lib.abstract_params(cfg)
             ap = jax.tree.map(lambda x: jax.ShapeDtypeStruct((C,) + x.shape,
                                                              x.dtype), ap)
