@@ -16,17 +16,12 @@ import dataclasses
 import numpy as np
 
 from benchmarks.common import build_scenario, build_simulation, emit, timed
-from repro.core import aggregation, em
-import jax
-import jax.numpy as jnp
 
 
 def _starve_target(sim, keep: int = 48):
     """Collaboration only matters when the target is data-poor: keep a
     sliver of the target's train set (test set untouched)."""
-    d = sim.train_sets[0]
-    d.x, d.y = d.x[:keep], d.y[:keep]
-    sim.sizes = sim.sizes.at[0].set(float(len(d)))
+    sim.restrict_target_train(keep)
     return sim
 
 
@@ -43,19 +38,14 @@ def _sim(seed=11, rounds=8, n=10, gamma=5.0, eps=0.15, starve=True):
 def a1_em_vs_uniform() -> dict:
     """Run pfedwn normally, then with EM replaced by uniform weights (π is
     still erasure-masked). Uniform == 'FedAvg over selected neighbors with
-    an α-blend'."""
+    an α-blend'. Uses the supported `em_uniform` config switch (the fused
+    engine compiles the EM step into the round block, so the old
+    `_em_round` monkeypatch can't reach it)."""
     sc, sim = _sim()
     em_acc = sim.run("pfedwn")["max_target_acc"]
-    # monkeypatch the EM round to return uniform weights
-    orig = sim._em_round
-    try:
-        def uniform(components, pi, x, y):
-            M = pi.shape[0]
-            return jnp.full((M,), 1.0 / M), None
-        sim._em_round = uniform
-        uni_acc = sim.run("pfedwn")["max_target_acc"]
-    finally:
-        sim._em_round = orig
+    _, sim_u = _sim()                 # identical data + seed, uniform π
+    sim_u.sim.em_uniform = True
+    uni_acc = sim_u.run("pfedwn")["max_target_acc"]
     return {"em": em_acc, "uniform": uni_acc, "delta": em_acc - uni_acc}
 
 

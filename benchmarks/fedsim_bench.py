@@ -1,0 +1,144 @@
+"""Federated-round-loop perf trajectory: fused scan-over-rounds engine vs
+the legacy host-driven loop, for all six methods at N=8 and N=32 clients.
+
+Emits ``name,us_per_call,derived`` CSV lines (harness convention) and writes
+``BENCH_fedsim.json`` at the repo root with before/after rounds-per-second —
+the "before" numbers are the legacy engine, the "after" numbers the fused
+engine, so later PRs can extend the trajectory instead of re-measuring the
+baseline.
+
+``smoke`` is the CI entry: a seconds-scale shape that runs both engines and
+asserts they still agree, so the bench harness can't silently rot.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.paper_cnn import CNNConfig
+from repro.core.fedsim import METHODS, FederatedSimulation, FedSimConfig
+from repro.data import (make_client_datasets, synthetic_image_dataset,
+                        train_test_split)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_fedsim.json")
+
+
+def build_sim(n_clients: int, *, fused: bool, rounds: int, eval_every: int,
+              samples: int = 0, image_size: int = 8, batch: int = 32,
+              seed: int = 0) -> FederatedSimulation:
+    """All-participants network with mild random link error — the learning
+    hot path is what's timed, not the channel layer.
+
+    Clients get an even random shard (~64 samples each by default) rather
+    than a Dirichlet split: the bench measures engine overhead at a fixed
+    steps-per-round, and the Dirichlet partitioner's remainder handling
+    hands one client a multiple of the mean, which would silently multiply
+    every method's per-round compute."""
+    samples = samples or 64 * n_clients
+    base = synthetic_image_dataset(seed, samples, image_size=image_size,
+                                   n_classes=10)
+    rng = np.random.default_rng(seed)
+    parts = np.array_split(rng.permutation(samples), n_clients)
+    train_sets = make_client_datasets(
+        base, [train_test_split(p, seed=seed + 1)[0] for p in parts])
+    test_sets = make_client_datasets(
+        base, [train_test_split(p, seed=seed + 1)[1] for p in parts])
+    pm = np.ones(n_clients, bool)
+    rng = np.random.default_rng(seed + 2)
+    p_err = np.concatenate(
+        [[0.0], rng.uniform(0.0, 0.1, n_clients - 1)]).astype(np.float32)
+    model_cfg = CNNConfig(image_size=image_size, widths=(4, 8), hidden=16,
+                          n_classes=10)
+    cfg = FedSimConfig(rounds=rounds, batch_size=batch, lr=0.05, alpha=0.7,
+                       em_iters=2, em_subset=32, adapt_subset=32,
+                       eval_every=eval_every, seed=seed, fused=fused)
+    return FederatedSimulation(model_cfg, train_sets, test_sets, pm, p_err,
+                               cfg)
+
+
+def time_method(sim: FederatedSimulation, method: str) -> Dict[str, float]:
+    """rounds/sec + per-round latency, compile/warmup excluded."""
+    sim.run(method)                       # warmup: compile every shape
+    t0 = time.perf_counter()
+    sim.run(method)
+    dt = time.perf_counter() - t0
+    rounds = sim.sim.rounds
+    return {"rounds_per_sec": rounds / dt, "round_latency_ms": dt / rounds * 1e3,
+            "total_s": dt}
+
+
+def run(rounds: int = 8, eval_every: int = 1) -> Dict:
+    import jax
+    results: Dict[str, Dict] = {}
+    for n in (8, 32):
+        sims = {engine: build_sim(n, fused=(engine == "fused"),
+                                  rounds=rounds, eval_every=eval_every)
+                for engine in ("legacy", "fused")}
+        results[f"N={n}"] = {}
+        for method in METHODS:
+            row: Dict[str, float] = {}
+            for engine, sim in sims.items():
+                t = time_method(sim, method)
+                row[f"{engine}_rounds_per_sec"] = round(t["rounds_per_sec"], 3)
+                row[f"{engine}_round_latency_ms"] = round(
+                    t["round_latency_ms"], 2)
+            row["speedup"] = round(row["fused_rounds_per_sec"]
+                                   / row["legacy_rounds_per_sec"], 2)
+            results[f"N={n}"][method] = row
+            emit(f"fedsim_{method}_N{n}",
+                 row["fused_round_latency_ms"] * 1e3,
+                 f"fused_rps={row['fused_rounds_per_sec']:.2f};"
+                 f"legacy_rps={row['legacy_rounds_per_sec']:.2f};"
+                 f"speedup={row['speedup']:.2f}x")
+    report = {
+        "bench": "fedsim_round_loop",
+        "device": jax.devices()[0].platform,
+        "jax_version": jax.__version__,
+        "config": {"rounds": rounds, "eval_every": eval_every,
+                   "batch_size": 32, "image_size": 8, "em_iters": 2,
+                   "em_subset": 32, "model": "cnn(4,8)/h16",
+                   "samples_per_client": 64, "partition": "even"},
+        "note": "legacy = host-driven per-round loop (before); "
+                "fused = donated scan-over-rounds engine (after)",
+        "results": results,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+        f.write("\n")
+    return report
+
+
+def smoke() -> None:
+    """CI-scale guard (seconds): both engines run and agree on a tiny shape.
+    Does NOT rewrite BENCH_fedsim.json."""
+    t0 = time.perf_counter()
+    sims = {engine: build_sim(4, fused=(engine == "fused"), rounds=3,
+                              eval_every=2, samples=400, image_size=8,
+                              batch=16)
+            for engine in ("legacy", "fused")}
+    hist = {engine: sim.run("pfedwn") for engine, sim in sims.items()}
+    gap = max(abs(a - b) for a, b in zip(hist["fused"]["target_acc"],
+                                         hist["legacy"]["target_acc"]))
+    if gap > 5e-3:
+        raise AssertionError(
+            f"fused/legacy disagree on smoke shape: |Δacc|={gap:.4f}")
+    assert sims["fused"].last_run_stats["device_calls"] == 2
+    emit("fedsim_smoke", (time.perf_counter() - t0) * 1e6,
+         f"parity_gap={gap:.1e};ok")
+
+
+def main() -> None:
+    report = run()
+    n32 = report["results"]["N=32"]["pfedwn"]
+    emit("fedsim_bench", 0.0,
+         f"wrote BENCH_fedsim.json;pfedwn_N32_speedup={n32['speedup']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,7 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (ablations, fig1_gap, fig5_neighbors,
+from benchmarks import (ablations, fedsim_bench, fig1_gap, fig5_neighbors,
                         fig6_selection, fig8_em_weights, kernels_bench,
                         roofline, table2_accuracy, table3_accuracy)
 
@@ -23,6 +23,8 @@ ALL = {
     "kernels": kernels_bench.main,
     "roofline": roofline.main,
     "ablations": ablations.main,
+    "fedsim_bench": fedsim_bench.main,
+    "fedsim_smoke": fedsim_bench.smoke,
 }
 
 

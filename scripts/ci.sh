@@ -8,6 +8,10 @@
 #
 # Stage 2 — the tier-1 suite itself (ROADMAP "Tier-1 verify").
 #
+# Stage 3 — benchmark smoke: runs the fedsim bench harness on a tiny shape
+# (seconds) so `benchmarks/fedsim_bench.py` and the fused/legacy engines
+# can't silently rot; it also asserts fused/legacy parity on that shape.
+#
 # Tests are offline by policy: the property tests run on the vendored
 # deterministic engine (src/repro/testing) unless a real `hypothesis`
 # happens to be installed.
@@ -19,7 +23,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # probing GCP metadata; every test in this suite targets host devices
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-echo "== stage 1/2: import gate (pytest --collect-only) =="
+echo "== stage 1/3: import gate (pytest --collect-only) =="
 # quiet on success (the full collected-test list is noise), but surface
 # pytest's collection errors when the gate trips
 gate_log="$(mktemp)"
@@ -33,5 +37,8 @@ fi
 rm -f "$gate_log"
 trap - EXIT
 
-echo "== stage 2/2: tier-1 suite =="
-exec python -m pytest -x -q "$@"
+echo "== stage 2/3: tier-1 suite =="
+python -m pytest -x -q "$@"
+
+echo "== stage 3/3: benchmark smoke (fedsim_smoke) =="
+python -m benchmarks.run --only fedsim_smoke

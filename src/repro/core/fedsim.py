@@ -7,21 +7,43 @@ module runs the learning side for any of:
 
   local | fedavg | fedprox | perfedavg | fedamp | pfedwn
 
+Two execution engines share the same round mathematics:
+
+  **fused** (default, ``FedSimConfig.fused=True``): all train/test tensors
+  live on device from ``__init__`` (padded + stacked via
+  ``data.synthetic.stack_datasets``); minibatch indices are drawn with
+  ``jax.random`` *inside* the jitted step; one donated round-step per method
+  fuses local-SGD → EM → erasure-gated aggregation → post-aggregation local
+  training, and ``eval_every``-sized blocks of rounds run through a single
+  ``jax.lax.scan`` so the host only syncs at eval boundaries. Evaluation is
+  one vmapped call over all participants (``cnn.masked_accuracy`` on the
+  padded test stack).
+
+  **legacy** (``fused=False``): the original host-driven loop — per-round
+  numpy batch materialization + upload, one jitted dispatch per phase, and
+  a Python per-client eval loop. Kept callable for parity testing and
+  debugging; it draws the *same* ``jax.random`` index stream as the fused
+  engine, so identical seeds produce identical trajectories (the parity
+  tests assert this).
+
 Paper fidelity notes:
   - optimizer: plain SGD (Eq 2), E local epochs per round, lr η
   - pFedWN target aggregation per Algorithm 2; EM weights per Algorithm 1
+    (the shared ``pfedwn.em_refine_loop`` body)
   - baselines restricted to the channel-selected participants (Sec V-A)
   - local epochs are approximated by a fixed number of minibatch steps per
     round (max over participants of ceil(k_n / B)) with per-client
     with-replacement sampling — necessary for vmap; distributional effect
     is negligible at these scales.
+
+Config fields that change compiled behavior (``lr``, ``alpha``,
+``em_uniform``, …) are read when a method's engine is first built; mutate
+them before the first ``run`` of a method, or call ``invalidate_caches``.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,13 +51,15 @@ import numpy as np
 
 from repro.configs.base import PFLConfig
 from repro.configs.paper_cnn import CNNConfig
-from repro.core import aggregation, baselines, em
-from repro.core.pfedwn import ModelFns, component_losses, refine_components
+from repro.core import aggregation, baselines
+from repro.core.pfedwn import ModelFns, em_refine_loop
 from repro.core.selection import link_success_mask
-from repro.data.synthetic import SyntheticImageDataset
+from repro.data.synthetic import SyntheticImageDataset, stack_datasets
 from repro.models import cnn
 
 PyTree = Any
+
+METHODS = ("local", "fedavg", "fedprox", "perfedavg", "fedamp", "pfedwn")
 
 
 @dataclass
@@ -46,6 +70,8 @@ class FedSimConfig:
     alpha: float = 0.5                 # Eq (1) self-weight
     em_iters: int = 5
     em_component_steps: int = 1
+    em_subset: int = 512               # target samples driving the EM E-step
+    adapt_subset: int = 256            # Per-FedAvg eval-time adaptation set
     prox_mu: float = 0.1               # FedProx
     maml_inner_lr: float = 0.01        # Per-FedAvg
     fedamp_sigma: float = 1e4
@@ -53,6 +79,20 @@ class FedSimConfig:
     erasures: bool = True              # re-sample link failures each round
     eval_every: int = 1
     seed: int = 0
+    fused: bool = True                 # scan-over-rounds engine (see module doc)
+    em_uniform: bool = False           # ablation: uniform π instead of EM
+
+
+def block_schedule(rounds: int, eval_every: int) -> List[int]:
+    """Round-block lengths between host syncs. Matches the legacy eval
+    schedule exactly: evaluate after round r when ``r % eval_every == 0`` or
+    ``r == rounds - 1`` — so blocks are [1, eval_every, ..., tail]."""
+    evals = sorted(set(range(0, rounds, max(eval_every, 1))) | {rounds - 1})
+    blocks, prev = [], -1
+    for r in evals:
+        blocks.append(r - prev)
+        prev = r
+    return blocks
 
 
 class FederatedSimulation:
@@ -82,32 +122,300 @@ class FederatedSimulation:
         keys = jax.random.split(key, self.n)
         self.params0 = jax.vmap(
             lambda k: cnn.init_params(k, model_cfg))(keys)
-        max_k = max(len(d) for d in train_sets)
+
+        self._neighbor_idx = np.where(np.asarray(self.participants)
+                                      & (np.arange(self.n) != 0))[0]
+        self._m = len(self._neighbor_idx)
+        self._stage_data()
+        self._blocks: Dict[str, Any] = {}      # method -> donated block jit
+        self._legacy: Dict[str, Any] = {}      # per-phase jits, built lazily
+        self.last_run_stats: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------- staging
+
+    def _stage_data(self) -> None:
+        """Move every tensor the round loop needs to device, once."""
+        sim = self.sim
+        tx, ty, tlen, _ = stack_datasets(self.train_sets)
+        self._train_x = jnp.asarray(tx)
+        self._train_y = jnp.asarray(ty)
+        self._train_len = jnp.asarray(tlen)
+        ex, ey, _, emask = stack_datasets(self.test_sets)
+        self._test_x = jnp.asarray(ex)
+        self._test_y = jnp.asarray(ey)
+        self._test_mask = jnp.asarray(emask)
+        # un-padded host slices -> device constants (EM E-step + MAML adapt)
+        d0 = self.train_sets[0]
+        self._em_x = jnp.asarray(d0.x[:sim.em_subset])
+        self._em_y = jnp.asarray(d0.y[:sim.em_subset])
+        self._adapt_x = jnp.asarray(d0.x[:sim.adapt_subset])
+        self._adapt_y = jnp.asarray(d0.y[:sim.adapt_subset])
+        max_k = max(len(d) for d in self.train_sets)
         self.steps_per_round = max(1, int(np.ceil(max_k / sim.batch_size)))
-        self._rng = np.random.default_rng(sim.seed + 1)
-        self._build_jitted()
 
-    # ------------------------------------------------------------ batching
+    def restrict_target_train(self, keep: int) -> None:
+        """Shrink the target's train set to its first ``keep`` samples (the
+        data-poor-target ablations) and restage device tensors + caches."""
+        d = self.train_sets[0]
+        d.x, d.y = d.x[:keep], d.y[:keep]
+        self.sizes = self.sizes.at[0].set(float(len(d)))
+        self.invalidate_caches()
 
-    def _sample_batches(self, steps: int):
-        """(N, steps, B, H, W, C) / (N, steps, B) stacked batches."""
-        B = self.sim.batch_size
-        xs, ys = [], []
-        for d in self.train_sets:
-            idx = self._rng.integers(0, len(d), (steps, B))
-            xs.append(d.x[idx])
-            ys.append(d.y[idx])
-        return (jnp.asarray(np.stack(xs, axis=0)),
-                jnp.asarray(np.stack(ys, axis=0)))
+    def invalidate_caches(self) -> None:
+        """Rebuild device staging and drop compiled engines — call after
+        mutating ``self.sim`` or any dataset in place."""
+        self._stage_data()
+        self._blocks.clear()
+        self._legacy.clear()
 
-    # -------------------------------------------------------------- jitted
+    # ---------------------------------------------------- shared round math
+    #
+    # One closure set per build: the *same* per-method round body is scanned
+    # by the fused engine and (phase-split) dispatched by the legacy engine,
+    # so the two paths agree bit-for-bit given the same index stream.
 
-    def _build_jitted(self):
+    def _sample_idx_fn(self):
+        """(N, steps, B) with-replacement minibatch indices, drawn on device
+        from a single round key — shared by both engines."""
+        steps, B, N = self.steps_per_round, self.sim.batch_size, self.n
+        train_len = jnp.maximum(self._train_len, 1)
+
+        def sample_idx(key):
+            ks = jax.random.split(key, N)
+            return jax.vmap(
+                lambda k, n: jax.random.randint(k, (steps, B), 0, n)
+            )(ks, train_len)
+
+        return sample_idx
+
+    def _sgd_one_fn(self):
+        """Per-client SGD over a round's minibatch indices; the batch gather
+        happens on device inside the scan body (no (N, steps, B, ...) batch
+        tensor is ever materialized)."""
+        fns, lr = self.fns, self.sim.lr
+
+        def sgd_one(p, dx, dy, idx):
+            def step(p, it):
+                g = jax.grad(fns.loss)(p, dx[it], dy[it])
+                return jax.tree.map(lambda w, gw: w - lr * gw, p, g), None
+
+            out, _ = jax.lax.scan(step, p, idx)
+            return out
+
+        return sgd_one
+
+    def _make_round_body(self, method: str):
+        """Build ``body(state, _) -> (state, _)`` for one round of `method`.
+        state = (params (N,...), pi (M,), key)."""
+        sim, fns = self.sim, self.fns
+        lr, B = sim.lr, sim.batch_size
+        pm = self.participants
+        pmf = pm.astype(jnp.float32)
+        sizes = self.sizes
+        train_x, train_y = self._train_x, self._train_y
+        nbr = jnp.asarray(self._neighbor_idx)
+        M = self._m
+        x0, y0 = self._em_x, self._em_y
+        p_err_nbr = self.p_err[nbr] if M else jnp.zeros((0,), jnp.float32)
+        em_min_w = PFLConfig().em_min_weight
+        sample_idx = self._sample_idx_fn()
+        sgd_one = self._sgd_one_fn()
+        local_all = jax.vmap(sgd_one)
+
+        def prox_one(p, anchor, active, dx, dy, idx):
+            # single pass over all clients: the prox pull is gated by
+            # `active`, so non-participants take plain local-SGD gradients
+            # (no second `_local_all` sweep + merge).
+            def obj(pp, x, y):
+                return fns.loss(pp, x, y) + active * baselines.prox_term(
+                    pp, anchor, sim.prox_mu)
+
+            def step(pp, it):
+                g = jax.grad(obj)(pp, dx[it], dy[it])
+                return jax.tree.map(lambda w, gw: w - lr * gw, pp, g), None
+
+            out, _ = jax.lax.scan(step, p, idx)
+            return out
+
+        prox_all = jax.vmap(prox_one, in_axes=(0, None, 0, 0, 0, 0))
+
+        def maml_one(p, dx, dy, idx):
+            half = B // 2
+
+            def step(pp, it):
+                x, y = dx[it], dy[it]
+                pp = baselines.perfedavg_step(
+                    fns.loss, pp, x[:half], y[:half], x[half:], y[half:],
+                    sim.maml_inner_lr, lr)
+                return pp, None
+
+            out, _ = jax.lax.scan(step, p, idx)
+            return out
+
+        maml_all = jax.vmap(maml_one)
+
+        def amp_one(p, cloud, dx, dy, idx):
+            def obj(pp, x, y):
+                return fns.loss(pp, x, y) + baselines.prox_term(
+                    pp, cloud, sim.prox_mu)
+
+            def step(pp, it):
+                g = jax.grad(obj)(pp, dx[it], dy[it])
+                return jax.tree.map(lambda w, gw: w - lr * gw, pp, g), None
+
+            out, _ = jax.lax.scan(step, p, idx)
+            return out
+
+        amp_all = jax.vmap(amp_one)
+
+        def body(state, _):
+            params, pi, key = state
+            key, k_sample, k_erase = jax.random.split(key, 3)
+            idx = sample_idx(k_sample)
+
+            if method == "local":
+                params = local_all(params, train_x, train_y, idx)
+
+            elif method == "fedavg":
+                params = local_all(params, train_x, train_y, idx)
+                g = baselines.fedavg_aggregate(params, sizes, pm)
+                params = baselines.broadcast_global(g, params, pm)
+
+            elif method == "fedprox":
+                g = baselines.fedavg_aggregate(params, sizes, pm)
+                params = prox_all(params, g, pmf, train_x, train_y, idx)
+                g = baselines.fedavg_aggregate(params, sizes, pm)
+                params = baselines.broadcast_global(g, params, pm)
+
+            elif method == "perfedavg":
+                params = maml_all(params, train_x, train_y, idx)
+                g = baselines.fedavg_aggregate(params, sizes, pm)
+                params = baselines.broadcast_global(g, params, pm)
+
+            elif method == "fedamp":
+                xi = baselines.fedamp_weights(params, sim.fedamp_sigma, pm,
+                                              sim.fedamp_self_weight)
+                cloud = baselines.fedamp_cloud_models(params, xi)
+                params = amp_all(params, cloud, train_x, train_y, idx)
+
+            elif method == "pfedwn":
+                # 1. everyone trains locally (neighbors included)
+                params = local_all(params, train_x, train_y, idx)
+                # 2-4. target: EM weights + erasure-gated aggregation
+                target = jax.tree.map(lambda p: p[0], params)
+                neighbors = jax.tree.map(lambda p: p[nbr], params)
+                if sim.em_uniform:
+                    pi_new = jnp.full((M,), 1.0 / max(M, 1))
+                else:
+                    _, pi_new, _ = em_refine_loop(
+                        fns, neighbors, pi, x0, y0, iters=sim.em_iters,
+                        lr=lr, min_weight=em_min_w,
+                        component_steps=sim.em_component_steps)
+                if sim.erasures:
+                    link_ok = link_success_mask(k_erase, p_err_nbr)
+                else:
+                    link_ok = jnp.ones((M,), bool)
+                mixed = aggregation.mix_params_with_erasures(
+                    target, neighbors, pi_new, sim.alpha, link_ok)
+                # 5. target trains locally from the aggregate
+                mixed = sgd_one(mixed, train_x[0], train_y[0], idx[0])
+                params = jax.tree.map(
+                    lambda s, t: s.at[0].set(t.astype(s.dtype)),
+                    params, mixed)
+                pi = pi_new
+
+            else:
+                raise ValueError(f"unknown method {method!r}")
+
+            return (params, pi, key), None
+
+        return body
+
+    def _make_eval_fn(self, method: str):
+        """(params) -> (target_acc, mean_participant_acc): one vmapped call
+        over all clients on the padded test stack."""
+        sim = self.sim
+        pmf = self.participants.astype(jnp.float32)
+        test_x, test_y, test_mask = self._test_x, self._test_y, self._test_mask
+        ax, ay = self._adapt_x, self._adapt_y
         fns = self.fns
-        lr = self.sim.lr
+
+        def eval_fn(params):
+            tgt = jax.tree.map(lambda p: p[0], params)
+            if method == "perfedavg":
+                tgt = baselines.maml_adapt(fns.loss, tgt, ax, ay,
+                                           sim.maml_inner_lr)
+            t_acc = cnn.masked_accuracy(tgt, test_x[0], test_y[0],
+                                        test_mask[0])
+            accs = jax.vmap(cnn.masked_accuracy)(params, test_x, test_y,
+                                                 test_mask)
+            mean_acc = jnp.sum(accs * pmf) / jnp.maximum(jnp.sum(pmf), 1.0)
+            return t_acc, mean_acc
+
+        return eval_fn
+
+    # --------------------------------------------------------- fused engine
+
+    def block_fn(self, method: str):
+        """The donated, jitted round-block runner for ``method``:
+        ``block(state, length)`` scans ``length`` rounds and evaluates, all
+        in one compiled executable (``length`` is static; ``state`` buffers
+        are donated so params update in place where the backend allows)."""
+        method = method.lower()
+        if method not in self._blocks:
+            body = self._make_round_body(method)
+            eval_fn = self._make_eval_fn(method)
+
+            def block(state, length):
+                state, _ = jax.lax.scan(body, state, None, length=length)
+                params, pi, _ = state
+                t_acc, mean_acc = eval_fn(params)
+                return state, (t_acc, mean_acc, pi)
+
+            self._blocks[method] = jax.jit(block, static_argnums=(1,),
+                                           donate_argnums=(0,))
+        return self._blocks[method]
+
+    def initial_state(self) -> Tuple[PyTree, jax.Array, jax.Array]:
+        """(params, π, key) at round 0. Params are a fresh copy so donated
+        block calls can't consume ``self.params0``."""
+        params = jax.tree.map(jnp.copy, self.params0)
+        pi = jnp.full((self._m,), 1.0 / max(self._m, 1), jnp.float32)
+        key = jax.random.PRNGKey(self.sim.seed + 7)
+        return params, pi, key
+
+    def _run_fused(self, method: str) -> Dict[str, Any]:
+        sim = self.sim
+        block = self.block_fn(method)
+        state = self.initial_state()
+        blocks = block_schedule(sim.rounds, sim.eval_every)
+        history: Dict[str, Any] = {"target_acc": [], "pi": [],
+                                   "mean_participant_acc": []}
+        for length in blocks:
+            state, (t_acc, mean_acc, pi) = block(state, length)
+            # host sync happens here, once per eval boundary
+            history["target_acc"].append(float(t_acc))
+            history["mean_participant_acc"].append(float(mean_acc))
+            if method == "pfedwn":
+                history["pi"].append(np.asarray(pi))
+        history["max_target_acc"] = float(np.max(history["target_acc"]))
+        self.last_run_stats = {"engine": "fused", "blocks": blocks,
+                               "device_calls": len(blocks)}
+        return history
+
+    # -------------------------------------------------------- legacy engine
+
+    def _legacy_fns(self) -> Dict[str, Any]:
+        """The original per-phase jits (one dispatch each per round), plus a
+        jitted index sampler whose output is pulled to host so batches are
+        re-materialized with numpy and re-uploaded every round — the
+        host-driven cost profile the fused engine removes."""
+        if self._legacy:
+            return self._legacy
+        fns, sim = self.fns, self.sim
+        lr = sim.lr
 
         def sgd_steps(params, xs, ys):
-            """xs: (steps, B, ...) for ONE client."""
             def step(p, batch):
                 x, y = batch
                 g = jax.grad(fns.loss)(p, x, y)
@@ -116,43 +424,10 @@ class FederatedSimulation:
             out, _ = jax.lax.scan(step, params, (xs, ys))
             return out
 
-        self._local_all = jax.jit(jax.vmap(sgd_steps))
-
         def prox_steps(params, anchor, xs, ys, active):
             def obj(p, x, y):
-                return fns.loss(p, x, y) + baselines.prox_term(
-                    p, anchor, self.sim.prox_mu)
-
-            def step(p, batch):
-                x, y = batch
-                g = jax.grad(obj)(p, x, y)
-                return jax.tree.map(lambda w, gw: w - lr * gw * active,
-                                    p, g), None
-
-            out, _ = jax.lax.scan(step, params, (xs, ys))
-            return out
-
-        self._prox_all = jax.jit(jax.vmap(prox_steps, in_axes=(0, None, 0, 0, 0)))
-
-        def maml_steps(params, xs, ys):
-            half = xs.shape[1] // 2
-
-            def step(p, batch):
-                x, y = batch
-                p = baselines.perfedavg_step(
-                    fns.loss, p, x[:half], y[:half], x[half:], y[half:],
-                    self.sim.maml_inner_lr, lr)
-                return p, None
-
-            out, _ = jax.lax.scan(step, params, (xs, ys))
-            return out
-
-        self._maml_all = jax.jit(jax.vmap(maml_steps))
-
-        def amp_steps(params, cloud, xs, ys):
-            def obj(p, x, y):
-                return fns.loss(p, x, y) + baselines.prox_term(
-                    p, cloud, self.sim.prox_mu)
+                return fns.loss(p, x, y) + active * baselines.prox_term(
+                    p, anchor, sim.prox_mu)
 
             def step(p, batch):
                 x, y = batch
@@ -162,35 +437,56 @@ class FederatedSimulation:
             out, _ = jax.lax.scan(step, params, (xs, ys))
             return out
 
-        self._amp_all = jax.jit(jax.vmap(amp_steps))
+        def maml_steps(params, xs, ys):
+            half = xs.shape[1] // 2
 
-        def accuracy_all(params, x, y):
-            return jax.vmap(fns.accuracy)(params, x, y)
+            def step(p, batch):
+                x, y = batch
+                p = baselines.perfedavg_step(
+                    fns.loss, p, x[:half], y[:half], x[half:], y[half:],
+                    sim.maml_inner_lr, lr)
+                return p, None
 
-        self._acc_all = jax.jit(accuracy_all)
+            out, _ = jax.lax.scan(step, params, (xs, ys))
+            return out
 
-        pfl = PFLConfig(alpha=self.sim.alpha, lr=lr,
-                        em_iters=self.sim.em_iters)
+        def amp_steps(params, cloud, xs, ys):
+            def obj(p, x, y):
+                return fns.loss(p, x, y) + baselines.prox_term(
+                    p, cloud, sim.prox_mu)
+
+            def step(p, batch):
+                x, y = batch
+                g = jax.grad(obj)(p, x, y)
+                return jax.tree.map(lambda w, gw: w - lr * gw, p, g), None
+
+            out, _ = jax.lax.scan(step, params, (xs, ys))
+            return out
 
         def em_round(components, pi, x, y):
-            def it(carry, _):
-                comps, pi_c = carry
-                losses = component_losses(fns, comps, x, y)
-                lam = em.posterior(pi_c, losses, pfl.em_min_weight)
-                pi_new = em.update_pi(lam)
-                if self.sim.em_component_steps:
-                    comps = refine_components(
-                        fns, comps, lam, x, y, lr,
-                        self.sim.em_component_steps)
-                return (comps, pi_new), pi_new
-
-            (comps, pi_star), hist = jax.lax.scan(it, (components, pi), None,
-                                                  length=pfl.em_iters)
+            _, pi_star, hist = em_refine_loop(
+                fns, components, pi, x, y, iters=sim.em_iters, lr=lr,
+                min_weight=PFLConfig().em_min_weight,
+                component_steps=sim.em_component_steps)
             return pi_star, hist
 
-        self._em_round = jax.jit(em_round)
+        self._legacy = {
+            "local_all": jax.jit(jax.vmap(sgd_steps)),
+            "prox_all": jax.jit(jax.vmap(prox_steps,
+                                         in_axes=(0, None, 0, 0, 0))),
+            "maml_all": jax.jit(jax.vmap(maml_steps)),
+            "amp_all": jax.jit(jax.vmap(amp_steps)),
+            "em_round": jax.jit(em_round),
+            "sample_idx": jax.jit(self._sample_idx_fn()),
+        }
+        return self._legacy
 
-    # ------------------------------------------------------------- methods
+    def _sample_batches(self, idx: np.ndarray):
+        """(N, steps, B, H, W, C) / (N, steps, B) stacked batches, gathered
+        on host and uploaded — the legacy path's per-round transfer."""
+        xs = np.stack([d.x[idx[i]] for i, d in enumerate(self.train_sets)])
+        ys = np.stack([d.y[idx[i]] for i, d in enumerate(self.train_sets)])
+        return jnp.asarray(xs), jnp.asarray(ys)
 
     def _eval_target(self, params_target) -> float:
         d = self.test_sets[0]
@@ -204,78 +500,80 @@ class FederatedSimulation:
         return jax.tree.map(lambda s, t: s.at[i].set(t.astype(s.dtype)),
                             stacked, tree)
 
-    def run(self, method: str) -> Dict[str, Any]:
-        method = method.lower()
+    def _run_legacy(self, method: str) -> Dict[str, Any]:
         sim = self.sim
+        jits = self._legacy_fns()
         params = self.params0
         pm = self.participants
         key = jax.random.PRNGKey(sim.seed + 7)
-        neighbor_idx = np.where(np.asarray(pm) &
-                                (np.arange(self.n) != 0))[0]
-        M = len(neighbor_idx)
+        neighbor_idx = self._neighbor_idx
+        M = self._m
         pi = jnp.full((M,), 1.0 / max(M, 1))
         history: Dict[str, Any] = {"target_acc": [], "pi": [],
                                    "mean_participant_acc": []}
+        device_calls = 0
 
         for rnd in range(sim.rounds):
-            xs, ys = self._sample_batches(self.steps_per_round)
-            key, k1 = jax.random.split(key)
+            key, k_sample, k_erase = jax.random.split(key, 3)
+            idx = np.asarray(jits["sample_idx"](k_sample))   # host round-trip
+            xs, ys = self._sample_batches(idx)
+            device_calls += 1
 
             if method == "local":
-                params = self._local_all(params, xs, ys)
+                params = jits["local_all"](params, xs, ys)
+                device_calls += 1
 
             elif method == "fedavg":
-                params = self._local_all(params, xs, ys)
+                params = jits["local_all"](params, xs, ys)
                 g = baselines.fedavg_aggregate(params, self.sizes, pm)
                 params = baselines.broadcast_global(g, params, pm)
+                device_calls += 3
 
             elif method == "fedprox":
                 g = baselines.fedavg_aggregate(params, self.sizes, pm)
                 active = pm.astype(jnp.float32)
-                new = self._prox_all(params, g, xs, ys, active)
-                # non-participants train plain local
-                plain = self._local_all(params, xs, ys)
-                params = jax.tree.map(
-                    lambda a, b: jnp.where(
-                        pm.reshape((-1,) + (1,) * (a.ndim - 1)), a, b),
-                    new, plain)
+                params = jits["prox_all"](params, g, xs, ys, active)
                 g = baselines.fedavg_aggregate(params, self.sizes, pm)
                 params = baselines.broadcast_global(g, params, pm)
+                device_calls += 4
 
             elif method == "perfedavg":
-                params = self._maml_all(params, xs, ys)
+                params = jits["maml_all"](params, xs, ys)
                 g = baselines.fedavg_aggregate(params, self.sizes, pm)
                 params = baselines.broadcast_global(g, params, pm)
+                device_calls += 3
 
             elif method == "fedamp":
                 xi = baselines.fedamp_weights(params, sim.fedamp_sigma, pm,
                                               sim.fedamp_self_weight)
                 cloud = baselines.fedamp_cloud_models(params, xi)
-                params = self._amp_all(params, cloud, xs, ys)
+                params = jits["amp_all"](params, cloud, xs, ys)
+                device_calls += 3
 
             elif method == "pfedwn":
-                # 1. everyone trains locally (neighbors included)
-                params = self._local_all(params, xs, ys)
-                # 2-4. target: EM weights + erasure-gated aggregation
+                params = jits["local_all"](params, xs, ys)
                 target = self._take(params, 0)
                 neighbors = jax.tree.map(
                     lambda p: p[jnp.asarray(neighbor_idx)], params)
                 d0 = self.train_sets[0]
-                x0 = jnp.asarray(d0.x[:512])
-                y0 = jnp.asarray(d0.y[:512])
-                pi, _ = self._em_round(neighbors, pi, x0, y0)
+                x0 = jnp.asarray(d0.x[:sim.em_subset])
+                y0 = jnp.asarray(d0.y[:sim.em_subset])
+                if sim.em_uniform:
+                    pi = jnp.full((M,), 1.0 / max(M, 1))
+                else:
+                    pi, _ = jits["em_round"](neighbors, pi, x0, y0)
                 if sim.erasures:
                     link_ok = link_success_mask(
-                        k1, self.p_err[jnp.asarray(neighbor_idx)])
+                        k_erase, self.p_err[jnp.asarray(neighbor_idx)])
                 else:
                     link_ok = jnp.ones((M,), bool)
                 mixed = aggregation.mix_params_with_erasures(
                     target, neighbors, pi, sim.alpha, link_ok)
-                # 5. target trains locally from the aggregate
-                mixed = self._local_all(
+                mixed = jits["local_all"](
                     jax.tree.map(lambda p: p[None], mixed),
                     xs[0][None], ys[0][None])
                 params = self._put(params, 0, self._take(mixed, 0))
+                device_calls += 5
             else:
                 raise ValueError(f"unknown method {method!r}")
 
@@ -284,8 +582,10 @@ class FederatedSimulation:
                 if method == "perfedavg":
                     d0 = self.train_sets[0]
                     tgt = baselines.maml_adapt(
-                        self.fns.loss, tgt, jnp.asarray(d0.x[:256]),
-                        jnp.asarray(d0.y[:256]), sim.maml_inner_lr)
+                        self.fns.loss, tgt,
+                        jnp.asarray(d0.x[:sim.adapt_subset]),
+                        jnp.asarray(d0.y[:sim.adapt_subset]),
+                        sim.maml_inner_lr)
                 history["target_acc"].append(self._eval_target(tgt))
                 accs = []
                 for i in np.where(np.asarray(pm))[0]:
@@ -293,8 +593,21 @@ class FederatedSimulation:
                     accs.append(float(self.fns.accuracy(
                         self._take(params, int(i)), jnp.asarray(d.x),
                         jnp.asarray(d.y))))
+                    device_calls += 1
                 history["mean_participant_acc"].append(float(np.mean(accs)))
                 if method == "pfedwn":
                     history["pi"].append(np.asarray(pi))
         history["max_target_acc"] = float(np.max(history["target_acc"]))
+        self.last_run_stats = {"engine": "legacy",
+                               "device_calls": device_calls}
         return history
+
+    # ---------------------------------------------------------------- entry
+
+    def run(self, method: str) -> Dict[str, Any]:
+        method = method.lower()
+        if method not in METHODS:
+            raise ValueError(f"unknown method {method!r}; have {METHODS}")
+        if self.sim.fused:
+            return self._run_fused(method)
+        return self._run_legacy(method)

@@ -60,6 +60,30 @@ def refine_components(fns: ModelFns, components: PyTree, lam: jax.Array,
     return jax.vmap(one)(components, lam.T)
 
 
+def em_refine_loop(fns: ModelFns, components: PyTree, pi: jax.Array,
+                   x: jax.Array, y: jax.Array, *, iters: int, lr: float,
+                   min_weight: float = 1e-6, component_steps: int = 1
+                   ) -> Tuple[PyTree, jax.Array, jax.Array]:
+    """Algorithm 1 (bottom half): scan ``iters`` EM iterations — E-step
+    posterior (Eq 9), M-step π update (Eq 10), and optional λ-weighted
+    component refinement (Eq 11). The single EM body shared by
+    :func:`pfedwn_round` and the federated simulator's fused round engine.
+
+    Returns (refined components, π*, π history (iters, M))."""
+    def em_iter(carry, _):
+        comps, pi_c = carry
+        losses = component_losses(fns, comps, x, y)       # (n, M)
+        lam = em.posterior(pi_c, losses, min_weight)
+        pi_new = em.update_pi(lam)
+        comps = refine_components(fns, comps, lam, x, y, lr,
+                                  component_steps) if component_steps else comps
+        return (comps, pi_new), pi_new
+
+    (comps, pi_star), pi_hist = jax.lax.scan(
+        em_iter, (components, pi), None, length=iters)
+    return comps, pi_star, pi_hist
+
+
 def pfedwn_round(key, fns: ModelFns, target_params: PyTree,
                  neighbor_params: PyTree, pi: jax.Array,
                  x: jax.Array, y: jax.Array, p_err: jax.Array,
@@ -75,19 +99,9 @@ def pfedwn_round(key, fns: ModelFns, target_params: PyTree,
     k_erase, k_train = jax.random.split(key)
 
     # --- EM weight assignment (Algorithm 1, bottom half) ---
-    components = neighbor_params
-
-    def em_iter(carry, _):
-        comps, pi_c = carry
-        losses = component_losses(fns, comps, x, y)       # (n, M)
-        lam = em.posterior(pi_c, losses, cfg.em_min_weight)
-        pi_new = em.update_pi(lam)
-        comps = refine_components(fns, comps, lam, x, y, cfg.lr,
-                                  component_steps) if component_steps else comps
-        return (comps, pi_new), pi_new
-
-    (components, pi_star), pi_hist = jax.lax.scan(
-        em_iter, (components, pi), None, length=cfg.em_iters)
+    components, pi_star, pi_hist = em_refine_loop(
+        fns, neighbor_params, pi, x, y, iters=cfg.em_iters, lr=cfg.lr,
+        min_weight=cfg.em_min_weight, component_steps=component_steps)
 
     # --- over-the-air exchange with erasures, then Eq (1) ---
     link_ok = link_success_mask(k_erase, p_err)

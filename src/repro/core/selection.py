@@ -54,8 +54,15 @@ def select_neighbors(cfg: WirelessConfig, target_pos: jax.Array,
     return SelectionResult(p_err=p, selected=p < eps)
 
 
-def link_success_mask(key, p_err: jax.Array) -> jax.Array:
+def link_success_mask(key, p_err: jax.Array,
+                      shape: tuple | None = None) -> jax.Array:
     """Per-round Bernoulli erasures: a selected neighbor's model update is
     lost with probability P_err (the over-the-air semantics used by the
-    round engine and by the pod-axis production aggregation)."""
-    return jax.random.uniform(key, p_err.shape) >= p_err
+    round engine, the simulator's fused scan-over-rounds engine, and the
+    pod-axis production aggregation).
+
+    ``shape`` optionally prepends leading draw axes (e.g. ``(rounds,)`` to
+    pre-draw a whole round block in one call); p_err broadcasts across them.
+    """
+    out_shape = p_err.shape if shape is None else tuple(shape) + p_err.shape
+    return jax.random.uniform(key, out_shape) >= p_err

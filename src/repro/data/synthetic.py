@@ -57,6 +57,32 @@ def make_client_datasets(base: SyntheticImageDataset,
             for idx in client_indices]
 
 
+def stack_datasets(datasets: List[SyntheticImageDataset]
+                   ) -> "tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]":
+    """Pad per-client datasets to a common length and stack them client-major.
+
+    Staging step for the simulator's device-resident fused engine: the
+    stacked tensors are uploaded once at construction and every round's
+    batch gather happens on device. Returns ``(x, y, lengths, mask)`` with
+    ``x: (N, K_max, ...)``, ``y: (N, K_max)``, ``lengths: (N,) int32`` true
+    sample counts, and ``mask: (N, K_max) bool`` marking real rows (padding
+    is zeros and must be masked or never indexed — index sampling draws from
+    ``[0, lengths[i])`` so padded rows are unreachable in training)."""
+    k_max = max(len(d) for d in datasets)
+    n = len(datasets)
+    d0 = datasets[0]
+    x = np.zeros((n, k_max) + d0.x.shape[1:], d0.x.dtype)
+    y = np.zeros((n, k_max), d0.y.dtype)
+    mask = np.zeros((n, k_max), bool)
+    for i, d in enumerate(datasets):
+        k = len(d)
+        x[i, :k] = d.x
+        y[i, :k] = d.y
+        mask[i, :k] = True
+    lengths = np.asarray([len(d) for d in datasets], np.int32)
+    return x, y, lengths, mask
+
+
 def token_batch_stream(seed: int, *, batch: int, seq_len: int, vocab: int,
                        n_batches: int = 0) -> Iterator[Dict[str, np.ndarray]]:
     """Synthetic LM stream: Zipf unigrams + deterministic bigram bleed so

@@ -38,13 +38,32 @@ def init_params(key, cfg: CNNConfig, dtype=jnp.float32) -> Dict:
     return params
 
 
+def _conv2d_same(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Stride-1 SAME conv (odd kernel) as shifted views + one einsum.
+
+    The simulator vmaps the model over per-client *weights*; under vmap,
+    ``lax.conv_general_dilated`` lowers to a grouped convolution that
+    XLA:CPU executes orders of magnitude slower than the equivalent
+    contraction. Gathering the k·k shifted views and contracting them with
+    a single einsum keeps the vmapped path on batched-GEMM kernels —
+    numerically the same sum, so training trajectories are unaffected up to
+    float addition order."""
+    k = w.shape[0]
+    pad = k // 2
+    b, h, wd, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    views = [xp[:, di:di + h, dj:dj + wd, :]
+             for di in range(k) for dj in range(k)]
+    patches = jnp.concatenate(views, axis=-1)        # (B, H, W, k*k*C)
+    out = patches.reshape(b * h * wd, k * k * c) @ w.reshape(k * k * c, -1)
+    return out.reshape(b, h, wd, w.shape[-1])
+
+
 def apply(params: Dict, x: jax.Array) -> jax.Array:
     """x: (B, H, W, C) -> logits (B, n_classes)."""
     h = x
     for blk in params["blocks"]:
-        h = jax.lax.conv_general_dilated(
-            h, blk["conv"], window_strides=(1, 1), padding="SAME",
-            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = _conv2d_same(h, blk["conv"])
         h = jax.nn.relu(h + blk["bias"][None, None, None, :])
         h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
                                   (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
@@ -66,3 +85,14 @@ def loss(params: Dict, x: jax.Array, y: jax.Array) -> jax.Array:
 
 def accuracy(params: Dict, x: jax.Array, y: jax.Array) -> jax.Array:
     return jnp.mean((jnp.argmax(apply(params, x), axis=-1) == y).astype(jnp.float32))
+
+
+def masked_accuracy(params: Dict, x: jax.Array, y: jax.Array,
+                    mask: jax.Array) -> jax.Array:
+    """Accuracy over the rows where ``mask`` is set. Lets the simulator pad
+    every client's test set to a common length and evaluate all clients in
+    one vmapped call: padded rows contribute nothing, so this equals
+    :func:`accuracy` on the unpadded set."""
+    ok = (jnp.argmax(apply(params, x), axis=-1) == y).astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(ok * m) / jnp.maximum(jnp.sum(m), 1.0)

@@ -1,0 +1,162 @@
+"""Fused scan-over-rounds engine: parity with the legacy per-round path,
+single-executable round blocks, the fedprox single-pass fix, and the shared
+EM refine loop."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.configs.paper_cnn import CNNConfig
+from repro.core import em, pfedwn
+from repro.core.fedsim import (METHODS, FederatedSimulation, FedSimConfig,
+                               block_schedule)
+from repro.data import (dirichlet_partition, make_client_datasets,
+                        synthetic_image_dataset, train_test_split)
+
+
+def _tiny_setup(n_clients=4, seed=0):
+    model_cfg = CNNConfig(image_size=8, widths=(4,), hidden=16, n_classes=4)
+    base = synthetic_image_dataset(seed, 600, image_size=8, n_classes=4)
+    parts = dirichlet_partition(base.y, n_clients, alpha=0.3, seed=seed)
+    train = make_client_datasets(
+        base, [train_test_split(p, seed=1)[0] for p in parts])
+    test = make_client_datasets(
+        base, [train_test_split(p, seed=1)[1] for p in parts])
+    # one non-participant so the masked branches (fedprox, aggregation)
+    # are exercised by the parity comparison
+    pm = np.array([True] * (n_clients - 1) + [False])
+    p_err = np.linspace(0.0, 0.2, n_clients).astype(np.float32)
+    return model_cfg, train, test, pm, p_err
+
+
+def _cfg(**kw):
+    base = dict(rounds=3, batch_size=16, lr=0.05, em_iters=2, em_subset=64,
+                adapt_subset=32, eval_every=2, seed=0)
+    base.update(kw)
+    return FedSimConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def sim_pair():
+    model_cfg, train, test, pm, p_err = _tiny_setup()
+    fused = FederatedSimulation(model_cfg, train, test, pm, p_err,
+                                _cfg(fused=True))
+    legacy = FederatedSimulation(model_cfg, train, test, pm, p_err,
+                                 _cfg(fused=False))
+    return fused, legacy
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_fused_matches_legacy(sim_pair, method):
+    """Same seed => same trajectory: the fused scan engine and the legacy
+    host-driven loop share the jax.random index stream and round math."""
+    fused, legacy = sim_pair
+    hf, hl = fused.run(method), legacy.run(method)
+    np.testing.assert_allclose(hf["target_acc"], hl["target_acc"], atol=5e-3)
+    np.testing.assert_allclose(hf["mean_participant_acc"],
+                               hl["mean_participant_acc"], atol=5e-3)
+    if method == "pfedwn":
+        np.testing.assert_allclose(np.stack(hf["pi"]), np.stack(hl["pi"]),
+                                   atol=1e-4)
+    assert fused.last_run_stats["engine"] == "fused"
+    assert legacy.last_run_stats["engine"] == "legacy"
+
+
+def test_block_schedule_matches_legacy_eval_points():
+    # legacy evaluates when rnd % e == 0 or rnd == rounds-1
+    for rounds, e in [(1, 1), (4, 1), (5, 2), (6, 3), (9, 4), (8, 4)]:
+        blocks = block_schedule(rounds, e)
+        assert sum(blocks) == rounds
+        evals = {r for r in range(rounds) if r % e == 0 or r == rounds - 1}
+        assert len(blocks) == len(evals)
+        assert blocks[0] == 1                      # eval after round 0
+
+
+def test_fused_syncs_only_at_eval_boundaries(sim_pair):
+    """The fused engine performs exactly one device call per eval boundary
+    (rounds=3, eval_every=2 => blocks [1, 2])."""
+    fused, _ = sim_pair
+    h = fused.run("local")
+    assert fused.last_run_stats["blocks"] == [1, 2]
+    assert fused.last_run_stats["device_calls"] == 2
+    assert len(h["target_acc"]) == 2
+
+
+def test_fused_block_is_single_executable_without_host_transfers(sim_pair):
+    """A whole round block lowers to ONE compiled executable whose HLO has
+    no host callbacks/infeed/outfeed, with the rounds scanned inside it (a
+    `while` op), so no per-round host transfer can exist."""
+    fused, _ = sim_pair
+    block = fused.block_fn("pfedwn")
+    state = fused.initial_state()
+    lowered = block.lower(state, 3)
+    text = lowered.as_text()
+    for marker in ("callback", "infeed", "outfeed", "CopyToHost"):
+        assert marker not in text, f"host transfer marker {marker!r}"
+    # the 3 rounds live inside the executable as a scan/while loop
+    assert "while" in text
+    compiled = lowered.compile()                  # a single executable
+    assert compat.cost_analysis(compiled).get("flops", 0.0) > 0
+
+
+def test_fedprox_single_pass_masking():
+    """With nobody participating, the prox pull is inactive for every client
+    and fedprox must degenerate to plain local training — the single-pass
+    `active`-gated objective replaces the old double (_prox_all + _local_all)
+    sweep."""
+    model_cfg, train, test, _, p_err = _tiny_setup()
+    pm_none = np.zeros(len(train), bool)
+    sim = FederatedSimulation(model_cfg, train, test, pm_none, p_err,
+                              _cfg(fused=True))
+    h_prox = sim.run("fedprox")
+    sim2 = FederatedSimulation(model_cfg, train, test, pm_none, p_err,
+                               _cfg(fused=True))
+    h_local = sim2.run("local")
+    np.testing.assert_allclose(h_prox["target_acc"], h_local["target_acc"],
+                               atol=1e-6)
+    np.testing.assert_allclose(h_prox["mean_participant_acc"],
+                               h_local["mean_participant_acc"], atol=1e-6)
+
+
+def test_em_refine_loop_shared_body():
+    """pfedwn.em_refine_loop (the body shared by pfedwn_round and the fused
+    simulator) reproduces the fixed-loss EM fixed point of em.em_weights
+    when component refinement is off."""
+    def psl(w, x, y):
+        return jnp.sum((w[None, :] - x) ** 2, axis=1)
+
+    fns = pfedwn.ModelFns(
+        per_sample_loss=psl,
+        loss=lambda w, x, y: jnp.mean(psl(w, x, y)),
+        accuracy=lambda w, x, y: -jnp.mean(psl(w, x, y)))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(1.0, 0.1, (32, 4)))
+    comps = jnp.stack([jnp.full((4,), 1.0), jnp.full((4,), -5.0)])
+    pi0 = jnp.array([0.5, 0.5])
+    out_comps, pi_star, hist = pfedwn.em_refine_loop(
+        fns, comps, pi0, x, None, iters=6, lr=0.05, min_weight=1e-8,
+        component_steps=0)
+    losses = pfedwn.component_losses(fns, comps, x, None)
+    pi_ref, _ = em.em_weights(pi0, losses, iters=6, min_weight=1e-8)
+    np.testing.assert_allclose(np.asarray(pi_star), np.asarray(pi_ref),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_comps), np.asarray(comps))
+    assert hist.shape == (6, 2)
+    assert float(pi_star[0]) > 0.9                 # similar component wins
+
+
+def test_restrict_target_train_restages_device_data():
+    model_cfg, train, test, pm, p_err = _tiny_setup()
+    sim = FederatedSimulation(model_cfg, train, test, pm, p_err,
+                              _cfg(fused=True))
+    before = int(sim._train_len[0])
+    sim.run("local")
+    sim.restrict_target_train(24)
+    assert int(sim._train_len[0]) == 24
+    assert int(sim.sizes[0]) == 24
+    assert before > 24
+    h = sim.run("pfedwn")                          # rebuilt engine still runs
+    assert 0.0 <= h["max_target_acc"] <= 1.0
