@@ -31,7 +31,9 @@ OUT_PATH = os.path.join(REPO_ROOT, "BENCH_fedsim.json")
 
 def build_sim(n_clients: int, *, fused: bool, rounds: int, eval_every: int,
               samples: int = 0, image_size: int = 8, batch: int = 32,
-              seed: int = 0) -> FederatedSimulation:
+              seed: int = 0, taps: bool = True,
+              record_dir: str | None = None,
+              run_name: str | None = None) -> FederatedSimulation:
     """All-participants network with mild random link error — the learning
     hot path is what's timed, not the channel layer.
 
@@ -57,17 +59,23 @@ def build_sim(n_clients: int, *, fused: bool, rounds: int, eval_every: int,
                           n_classes=10)
     cfg = FedSimConfig(rounds=rounds, batch_size=batch, lr=0.05, alpha=0.7,
                        em_iters=2, em_subset=32, adapt_subset=32,
-                       eval_every=eval_every, seed=seed, fused=fused)
+                       eval_every=eval_every, seed=seed, fused=fused,
+                       taps=taps, record_dir=record_dir, run_name=run_name)
     return FederatedSimulation(model_cfg, train_sets, test_sets, pm, p_err,
                                cfg)
 
 
-def time_method(sim: FederatedSimulation, method: str) -> Dict[str, float]:
-    """rounds/sec + per-round latency, compile/warmup excluded."""
+def time_method(sim: FederatedSimulation, method: str,
+                repeat: int = 1) -> Dict[str, float]:
+    """rounds/sec + per-round latency, compile/warmup excluded; with
+    ``repeat`` > 1, keeps the fastest run (noise floor for the obs-overhead
+    comparison)."""
     sim.run(method)                       # warmup: compile every shape
-    t0 = time.perf_counter()
-    sim.run(method)
-    dt = time.perf_counter() - t0
+    dt = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        sim.run(method)
+        dt = min(dt, time.perf_counter() - t0)
     rounds = sim.sim.rounds
     return {"rounds_per_sec": rounds / dt, "round_latency_ms": dt / rounds * 1e3,
             "total_s": dt}
@@ -77,8 +85,10 @@ def run(rounds: int = 8, eval_every: int = 1) -> Dict:
     import jax
     results: Dict[str, Dict] = {}
     for n in (8, 32):
+        # records emitted by default: runs/fedsim_{engine}_N{n}_seed0.jsonl
         sims = {engine: build_sim(n, fused=(engine == "fused"),
-                                  rounds=rounds, eval_every=eval_every)
+                                  rounds=rounds, eval_every=eval_every,
+                                  record_dir=os.path.join(REPO_ROOT, "runs"))
                 for engine in ("legacy", "fused")}
         results[f"N={n}"] = {}
         for method in METHODS:
@@ -108,10 +118,87 @@ def run(rounds: int = 8, eval_every: int = 1) -> Dict:
                 "fused = donated scan-over-rounds engine (after)",
         "results": results,
     }
+    # trajectory policy: entries other benches appended (obs_overhead)
+    # survive a re-run of the base sweep
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as f:
+            prev = json.load(f)
+        if "obs_overhead" in prev:
+            report["obs_overhead"] = prev["obs_overhead"]
+    _write_report(report)
+    return report
+
+
+def _write_report(report: Dict) -> None:
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=1)
         f.write("\n")
-    return report
+
+
+def obs_overhead(rounds: int = 8) -> Dict:
+    """Extend the BENCH_fedsim.json trajectory with the telemetry-tap cost:
+    fused pfedwn rounds/sec with the device-side metrics tap on vs off
+    (same shape as the base sweep's N=8 row). Appends an ``obs_overhead``
+    entry to the existing report — the legacy/fused baseline is NOT
+    re-measured (ROADMAP perf-trajectory policy) — and asserts the tap
+    costs < 5% of fused throughput."""
+    if not os.path.exists(OUT_PATH):
+        raise RuntimeError(
+            f"{OUT_PATH} missing: run `python -m benchmarks.run --only "
+            "fedsim_bench` first (obs_overhead extends the trajectory, it "
+            "does not re-measure the baseline)")
+    with open(OUT_PATH) as f:
+        report = json.load(f)
+    rps = {}
+    for taps in (False, True):
+        sim = build_sim(8, fused=True, rounds=rounds, eval_every=1,
+                        taps=taps)
+        rps[taps] = time_method(sim, "pfedwn", repeat=3)["rounds_per_sec"]
+    overhead_pct = (rps[False] - rps[True]) / rps[False] * 100.0
+    report["obs_overhead"] = {
+        "note": "fused pfedwn N=8, device-side metrics tap on vs off "
+                "(taps ride the round scan, drain at eval boundaries)",
+        "rounds": rounds,
+        "taps_off_rounds_per_sec": round(rps[False], 3),
+        "taps_on_rounds_per_sec": round(rps[True], 3),
+        "overhead_pct": round(overhead_pct, 2),
+    }
+    _write_report(report)
+    emit("fedsim_obs_overhead", 0.0,
+         f"taps_on_rps={rps[True]:.2f};taps_off_rps={rps[False]:.2f};"
+         f"overhead={overhead_pct:.2f}%")
+    assert overhead_pct < 5.0, (
+        f"metrics-tap overhead {overhead_pct:.2f}% exceeds the 5% budget")
+    return report["obs_overhead"]
+
+
+def obs_smoke() -> None:
+    """CI stage-4 entry (seconds): run a tiny instrumented fused simulation,
+    emit runs/obs_smoke.jsonl + Chrome trace, and validate the RunRecord
+    schema in-process. ci.sh follows up with `python -m repro.obs.report`
+    on the same file."""
+    from repro.obs import validate_jsonl_lines
+    t0 = time.perf_counter()
+    out_dir = os.path.join(REPO_ROOT, "runs")
+    sim = build_sim(4, fused=True, rounds=3, eval_every=2, samples=400,
+                    image_size=8, batch=16, record_dir=out_dir,
+                    run_name="obs_smoke")
+    sim.run("pfedwn")
+    jsonl = os.path.join(out_dir, "obs_smoke.jsonl")
+    trace = os.path.join(out_dir, "obs_smoke.trace.json")
+    assert os.path.exists(jsonl), "RunRecord JSONL not emitted"
+    assert os.path.exists(trace), "Chrome trace not emitted"
+    with open(jsonl) as f:
+        lines = f.readlines()
+    errors = validate_jsonl_lines(lines)
+    assert not errors, f"RunRecord schema violations: {errors[:5]}"
+    types = [json.loads(ln)["type"] for ln in lines]
+    for expected in ("meta", "compile", "round", "eval", "summary"):
+        assert expected in types, f"missing {expected!r} event"
+    # the tap must not break the host-sync-only-at-eval-boundaries property
+    assert sim.last_run_stats["device_calls"] == 2
+    emit("obs_smoke", (time.perf_counter() - t0) * 1e6,
+         f"events={len(types)};rounds={types.count('round')};ok")
 
 
 def smoke() -> None:
@@ -138,6 +225,7 @@ def main() -> None:
     n32 = report["results"]["N=32"]["pfedwn"]
     emit("fedsim_bench", 0.0,
          f"wrote BENCH_fedsim.json;pfedwn_N32_speedup={n32['speedup']:.2f}x")
+    obs_overhead()
 
 
 if __name__ == "__main__":

@@ -25,13 +25,25 @@ ALL = {
     "ablations": ablations.main,
     "fedsim_bench": fedsim_bench.main,
     "fedsim_smoke": fedsim_bench.smoke,
+    "fedsim_obs_overhead": fedsim_bench.obs_overhead,
+    "obs_smoke": fedsim_bench.obs_smoke,
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark by registry name")
+    ap.add_argument("--list", action="store_true",
+                    help="print the available benchmark names and exit")
     args = ap.parse_args()
+    if args.list:
+        print("\n".join(ALL))
+        return
+    if args.only is not None and args.only not in ALL:
+        raise SystemExit(
+            f"unknown benchmark {args.only!r}; available: "
+            + ", ".join(sorted(ALL)))
     names = [args.only] if args.only else list(ALL)
     print("name,us_per_call,derived")
     failed = []

@@ -12,6 +12,11 @@
 # (seconds) so `benchmarks/fedsim_bench.py` and the fused/legacy engines
 # can't silently rot; it also asserts fused/legacy parity on that shape.
 #
+# Stage 4 — obs smoke: runs a tiny *instrumented* fused simulation that
+# emits a RunRecord JSONL + Chrome trace under runs/, then invokes
+# `python -m repro.obs.report` on the emitted file; the report CLI exits
+# non-zero on any RunRecord schema violation.
+#
 # Tests are offline by policy: the property tests run on the vendored
 # deterministic engine (src/repro/testing) unless a real `hypothesis`
 # happens to be installed.
@@ -23,7 +28,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # probing GCP metadata; every test in this suite targets host devices
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-echo "== stage 1/3: import gate (pytest --collect-only) =="
+echo "== stage 1/4: import gate (pytest --collect-only) =="
 # quiet on success (the full collected-test list is noise), but surface
 # pytest's collection errors when the gate trips
 gate_log="$(mktemp)"
@@ -37,8 +42,12 @@ fi
 rm -f "$gate_log"
 trap - EXIT
 
-echo "== stage 2/3: tier-1 suite =="
+echo "== stage 2/4: tier-1 suite =="
 python -m pytest -x -q "$@"
 
-echo "== stage 3/3: benchmark smoke (fedsim_smoke) =="
+echo "== stage 3/4: benchmark smoke (fedsim_smoke) =="
 python -m benchmarks.run --only fedsim_smoke
+
+echo "== stage 4/4: obs smoke (instrumented run + RunRecord report) =="
+python -m benchmarks.run --only obs_smoke
+python -m repro.obs.report runs/obs_smoke.jsonl

@@ -42,12 +42,17 @@ def prox_term(params: PyTree, anchor: PyTree, mu: float) -> jax.Array:
 
 
 def perfedavg_step(loss_fn: Callable, params: PyTree, x1, y1, x2, y2,
-                   inner_lr: float, outer_lr: float) -> PyTree:
-    """First-order Per-FedAvg (MAML) step: w ← w − β ∇f_{D₂}(w − α ∇f_{D₁}(w))."""
+                   inner_lr: float, outer_lr: float):
+    """First-order Per-FedAvg (MAML) step: w ← w − β ∇f_{D₂}(w − α ∇f_{D₁}(w)).
+
+    Returns ``(new_params, query_loss)`` — the query-half loss at the
+    adapted params falls out of the outer ``value_and_grad`` for free, and
+    is what the simulator's metrics tap records as this method's per-round
+    train loss."""
     g1 = jax.grad(loss_fn)(params, x1, y1)
     adapted = jax.tree.map(lambda p, g: p - inner_lr * g, params, g1)
-    g2 = jax.grad(loss_fn)(adapted, x2, y2)
-    return jax.tree.map(lambda p, g: p - outer_lr * g, params, g2)
+    l2, g2 = jax.value_and_grad(loss_fn)(adapted, x2, y2)
+    return jax.tree.map(lambda p, g: p - outer_lr * g, params, g2), l2
 
 
 def maml_adapt(loss_fn: Callable, params: PyTree, x, y,

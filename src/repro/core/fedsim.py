@@ -36,24 +36,40 @@ Paper fidelity notes:
     with-replacement sampling — necessary for vmap; distributional effect
     is negligible at these scales.
 
+Telemetry (``repro.obs``): every simulation owns a ``RunRecorder``. The
+fused engine's **device-side metrics tap** (``FedSimConfig.taps``) emits
+per-round scalars — per-client train loss (free: the forward value already
+computed by ``value_and_grad``), EM weight entropy, effective neighbor
+count, link success rate — as outputs of the round scan, stacked on device
+and drained only at eval boundaries, so instrumentation adds no host syncs
+and the round block stays a single executable. The legacy engine records
+the same scalars host-side, so fused and legacy RunRecords are
+schema-identical. Set ``FedSimConfig.record_dir`` to persist the JSONL
+RunRecord + Chrome trace (``python -m repro.obs.report`` summarizes them).
+
 Config fields that change compiled behavior (``lr``, ``alpha``,
-``em_uniform``, …) are read when a method's engine is first built; mutate
-them before the first ``run`` of a method, or call ``invalidate_caches``.
+``em_uniform``, ``taps``, …) are read when a method's engine is first
+built; mutate them before the first ``run`` of a method, or call
+``invalidate_caches``.
 """
 from __future__ import annotations
 
+import os
+import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import PFLConfig
 from repro.configs.paper_cnn import CNNConfig
 from repro.core import aggregation, baselines
-from repro.core.pfedwn import ModelFns, em_refine_loop
-from repro.core.selection import link_success_mask
+from repro.core.pfedwn import (ModelFns, effective_neighbors, em_refine_loop,
+                               pi_entropy)
+from repro.core.selection import link_success_mask, link_success_rate
 from repro.data.synthetic import SyntheticImageDataset, stack_datasets
 from repro.models import cnn
 
@@ -81,6 +97,9 @@ class FedSimConfig:
     seed: int = 0
     fused: bool = True                 # scan-over-rounds engine (see module doc)
     em_uniform: bool = False           # ablation: uniform π instead of EM
+    taps: bool = True                  # device-side per-round metrics tap
+    record_dir: Optional[str] = None   # persist RunRecord JSONL + trace here
+    run_name: Optional[str] = None     # record file stem (default: derived)
 
 
 def block_schedule(rounds: int, eval_every: int) -> List[int]:
@@ -103,10 +122,12 @@ class FederatedSimulation:
                  test_sets: List[SyntheticImageDataset],
                  participant_mask: np.ndarray,     # (N,) bool, incl. target
                  p_err: np.ndarray,                # (N,) target-link P_err
-                 sim: FedSimConfig):
+                 sim: FedSimConfig,
+                 recorder: Optional[obs.RunRecorder] = None):
         self.model_cfg = model_cfg
         self.sim = sim
         self.n = len(train_sets)
+        self.recorder = recorder or self._default_recorder()
         self.train_sets = train_sets
         self.test_sets = test_sets
         self.participants = jnp.asarray(participant_mask, bool)
@@ -128,13 +149,29 @@ class FederatedSimulation:
         self._m = len(self._neighbor_idx)
         self._stage_data()
         self._blocks: Dict[str, Any] = {}      # method -> donated block jit
+        self._block_execs: Dict[Tuple[str, int], Any] = {}  # AOT-compiled
         self._legacy: Dict[str, Any] = {}      # per-phase jits, built lazily
         self.last_run_stats: Dict[str, Any] = {}
+
+    def _default_recorder(self) -> obs.RunRecorder:
+        """In-memory RunRecorder, persisted when ``record_dir`` is set."""
+        sim = self.sim
+        jsonl = trace = None
+        if sim.record_dir:
+            engine = "fused" if sim.fused else "legacy"
+            name = sim.run_name or f"fedsim_{engine}_N{self.n}_seed{sim.seed}"
+            jsonl = os.path.join(sim.record_dir, f"{name}.jsonl")
+            trace = os.path.join(sim.record_dir, f"{name}.trace.json")
+        return obs.RunRecorder(jsonl_path=jsonl, trace_path=trace)
 
     # ------------------------------------------------------------- staging
 
     def _stage_data(self) -> None:
         """Move every tensor the round loop needs to device, once."""
+        with self.recorder.span("stage_data", n_clients=self.n):
+            self._stage_data_inner()
+
+    def _stage_data_inner(self) -> None:
         sim = self.sim
         tx, ty, tlen, _ = stack_datasets(self.train_sets)
         self._train_x = jnp.asarray(tx)
@@ -166,6 +203,7 @@ class FederatedSimulation:
         mutating ``self.sim`` or any dataset in place."""
         self._stage_data()
         self._blocks.clear()
+        self._block_execs.clear()
         self._legacy.clear()
 
     # ---------------------------------------------------- shared round math
@@ -191,23 +229,29 @@ class FederatedSimulation:
     def _sgd_one_fn(self):
         """Per-client SGD over a round's minibatch indices; the batch gather
         happens on device inside the scan body (no (N, steps, B, ...) batch
-        tensor is ever materialized)."""
+        tensor is ever materialized). Returns ``(params, mean minibatch
+        loss)`` — the loss is the forward value ``value_and_grad`` computes
+        anyway, so the metrics tap costs nothing here (and XLA dead-code
+        eliminates it when taps are off)."""
         fns, lr = self.fns, self.sim.lr
 
         def sgd_one(p, dx, dy, idx):
             def step(p, it):
-                g = jax.grad(fns.loss)(p, dx[it], dy[it])
-                return jax.tree.map(lambda w, gw: w - lr * gw, p, g), None
+                l, g = jax.value_and_grad(fns.loss)(p, dx[it], dy[it])
+                return jax.tree.map(lambda w, gw: w - lr * gw, p, g), l
 
-            out, _ = jax.lax.scan(step, p, idx)
-            return out
+            out, losses = jax.lax.scan(step, p, idx)
+            return out, jnp.mean(losses)
 
         return sgd_one
 
     def _make_round_body(self, method: str):
-        """Build ``body(state, _) -> (state, _)`` for one round of `method`.
-        state = (params (N,...), pi (M,), key)."""
+        """Build ``body(state, _) -> (state, tap)`` for one round of
+        `method`. state = (params (N,...), pi (M,), key); ``tap`` is the
+        per-round metrics dict when ``sim.taps`` (stacked by the block scan,
+        drained at eval boundaries) or None when taps are off."""
         sim, fns = self.sim, self.fns
+        taps_on = sim.taps
         lr, B = sim.lr, sim.batch_size
         pm = self.participants
         pmf = pm.astype(jnp.float32)
@@ -231,11 +275,11 @@ class FederatedSimulation:
                     pp, anchor, sim.prox_mu)
 
             def step(pp, it):
-                g = jax.grad(obj)(pp, dx[it], dy[it])
-                return jax.tree.map(lambda w, gw: w - lr * gw, pp, g), None
+                l, g = jax.value_and_grad(obj)(pp, dx[it], dy[it])
+                return jax.tree.map(lambda w, gw: w - lr * gw, pp, g), l
 
-            out, _ = jax.lax.scan(step, p, idx)
-            return out
+            out, losses = jax.lax.scan(step, p, idx)
+            return out, jnp.mean(losses)
 
         prox_all = jax.vmap(prox_one, in_axes=(0, None, 0, 0, 0, 0))
 
@@ -244,13 +288,13 @@ class FederatedSimulation:
 
             def step(pp, it):
                 x, y = dx[it], dy[it]
-                pp = baselines.perfedavg_step(
+                pp, l = baselines.perfedavg_step(
                     fns.loss, pp, x[:half], y[:half], x[half:], y[half:],
                     sim.maml_inner_lr, lr)
-                return pp, None
+                return pp, l
 
-            out, _ = jax.lax.scan(step, p, idx)
-            return out
+            out, losses = jax.lax.scan(step, p, idx)
+            return out, jnp.mean(losses)
 
         maml_all = jax.vmap(maml_one)
 
@@ -260,47 +304,59 @@ class FederatedSimulation:
                     pp, cloud, sim.prox_mu)
 
             def step(pp, it):
-                g = jax.grad(obj)(pp, dx[it], dy[it])
-                return jax.tree.map(lambda w, gw: w - lr * gw, pp, g), None
+                l, g = jax.value_and_grad(obj)(pp, dx[it], dy[it])
+                return jax.tree.map(lambda w, gw: w - lr * gw, pp, g), l
 
-            out, _ = jax.lax.scan(step, p, idx)
-            return out
+            out, losses = jax.lax.scan(step, p, idx)
+            return out, jnp.mean(losses)
 
         amp_all = jax.vmap(amp_one)
+
+        # non-collaborative / all-participant defaults for the tap scalars;
+        # the pfedwn branch overwrites them with its channel-aware values
+        nbr_count = jnp.maximum(jnp.sum(pmf) - 1.0, 0.0)
 
         def body(state, _):
             params, pi, key = state
             key, k_sample, k_erase = jax.random.split(key, 3)
             idx = sample_idx(k_sample)
+            link_rate = jnp.float32(1.0)
 
             if method == "local":
-                params = local_all(params, train_x, train_y, idx)
+                params, train_loss = local_all(params, train_x, train_y, idx)
+                eff_nbr = jnp.float32(0.0)
 
             elif method == "fedavg":
-                params = local_all(params, train_x, train_y, idx)
+                params, train_loss = local_all(params, train_x, train_y, idx)
                 g = baselines.fedavg_aggregate(params, sizes, pm)
                 params = baselines.broadcast_global(g, params, pm)
+                eff_nbr = nbr_count
 
             elif method == "fedprox":
                 g = baselines.fedavg_aggregate(params, sizes, pm)
-                params = prox_all(params, g, pmf, train_x, train_y, idx)
+                params, train_loss = prox_all(params, g, pmf, train_x,
+                                              train_y, idx)
                 g = baselines.fedavg_aggregate(params, sizes, pm)
                 params = baselines.broadcast_global(g, params, pm)
+                eff_nbr = nbr_count
 
             elif method == "perfedavg":
-                params = maml_all(params, train_x, train_y, idx)
+                params, train_loss = maml_all(params, train_x, train_y, idx)
                 g = baselines.fedavg_aggregate(params, sizes, pm)
                 params = baselines.broadcast_global(g, params, pm)
+                eff_nbr = nbr_count
 
             elif method == "fedamp":
                 xi = baselines.fedamp_weights(params, sim.fedamp_sigma, pm,
                                               sim.fedamp_self_weight)
                 cloud = baselines.fedamp_cloud_models(params, xi)
-                params = amp_all(params, cloud, train_x, train_y, idx)
+                params, train_loss = amp_all(params, cloud, train_x,
+                                             train_y, idx)
+                eff_nbr = nbr_count
 
             elif method == "pfedwn":
                 # 1. everyone trains locally (neighbors included)
-                params = local_all(params, train_x, train_y, idx)
+                params, train_loss = local_all(params, train_x, train_y, idx)
                 # 2-4. target: EM weights + erasure-gated aggregation
                 target = jax.tree.map(lambda p: p[0], params)
                 neighbors = jax.tree.map(lambda p: p[nbr], params)
@@ -318,16 +374,26 @@ class FederatedSimulation:
                 mixed = aggregation.mix_params_with_erasures(
                     target, neighbors, pi_new, sim.alpha, link_ok)
                 # 5. target trains locally from the aggregate
-                mixed = sgd_one(mixed, train_x[0], train_y[0], idx[0])
+                mixed, loss0 = sgd_one(mixed, train_x[0], train_y[0], idx[0])
                 params = jax.tree.map(
                     lambda s, t: s.at[0].set(t.astype(s.dtype)),
                     params, mixed)
                 pi = pi_new
+                # the target's tap entry tracks the post-aggregation pass
+                train_loss = train_loss.at[0].set(loss0)
+                link_rate = link_success_rate(link_ok)
+                eff_nbr = effective_neighbors(pi_new, link_ok)
 
             else:
                 raise ValueError(f"unknown method {method!r}")
 
-            return (params, pi, key), None
+            tap = None
+            if taps_on:
+                tap = {"train_loss": train_loss,
+                       "em_entropy": pi_entropy(pi),
+                       "link_success_rate": link_rate,
+                       "effective_neighbors": eff_nbr}
+            return (params, pi, key), tap
 
         return body
 
@@ -367,14 +433,34 @@ class FederatedSimulation:
             eval_fn = self._make_eval_fn(method)
 
             def block(state, length):
-                state, _ = jax.lax.scan(body, state, None, length=length)
+                # tap scalars are stacked by the scan (device-side) and
+                # leave the executable only here, with the eval outputs
+                state, taps = jax.lax.scan(body, state, None, length=length)
                 params, pi, _ = state
                 t_acc, mean_acc = eval_fn(params)
-                return state, (t_acc, mean_acc, pi)
+                return state, (t_acc, mean_acc, pi, taps)
 
             self._blocks[method] = jax.jit(block, static_argnums=(1,),
                                            donate_argnums=(0,))
         return self._blocks[method]
+
+    def _compiled_block(self, method: str, length: int, state) -> Any:
+        """AOT-compiled executable for one (method, block length) shape,
+        cached; compilation is spanned and its FLOP/byte cost estimate is
+        recorded as a compile event."""
+        key = (method, int(length))
+        exe = self._block_execs.get(key)
+        if exe is None:
+            block = self.block_fn(method)
+            t0 = time.perf_counter()
+            with self.recorder.span("compile", cat="compile", method=method,
+                                    rounds=length):
+                exe = block.lower(state, length).compile()
+            self.recorder.record_compile(
+                f"{method}/block{length}", compiled=exe,
+                seconds=time.perf_counter() - t0)
+            self._block_execs[key] = exe
+        return exe
 
     def initial_state(self) -> Tuple[PyTree, jax.Array, jax.Array]:
         """(params, π, key) at round 0. Params are a fresh copy so donated
@@ -385,19 +471,42 @@ class FederatedSimulation:
         return params, pi, key
 
     def _run_fused(self, method: str) -> Dict[str, Any]:
-        sim = self.sim
-        block = self.block_fn(method)
+        sim, rec = self.sim, self.recorder
         state = self.initial_state()
         blocks = block_schedule(sim.rounds, sim.eval_every)
         history: Dict[str, Any] = {"target_acc": [], "pi": [],
                                    "mean_participant_acc": []}
+        rnd = 0
         for length in blocks:
-            state, (t_acc, mean_acc, pi) = block(state, length)
-            # host sync happens here, once per eval boundary
-            history["target_acc"].append(float(t_acc))
-            history["mean_participant_acc"].append(float(mean_acc))
+            exe = self._compiled_block(method, length, state)
+            t0 = time.perf_counter()
+            with rec.span("block_exec", method=method, rounds=length):
+                state, (t_acc, mean_acc, pi, taps) = exe(state)
+                # host sync happens here, once per eval boundary
+                t_acc, mean_acc = float(t_acc), float(mean_acc)
+            rec.observe_round_latency(
+                (time.perf_counter() - t0) / length * 1e3, n=length)
+            with rec.span("drain", method=method, rounds=length):
+                if taps is not None:
+                    tl = np.asarray(taps["train_loss"])
+                    ent = np.asarray(taps["em_entropy"])
+                    lsr = np.asarray(taps["link_success_rate"])
+                    eff = np.asarray(taps["effective_neighbors"])
+                    for i in range(length):
+                        rec.record_round(
+                            rnd + i, train_loss=tl[i].tolist(),
+                            em_entropy=float(ent[i]),
+                            link_success_rate=float(lsr[i]),
+                            effective_neighbors=float(eff[i]))
+            rnd += length
+            history["target_acc"].append(t_acc)
+            history["mean_participant_acc"].append(mean_acc)
+            pi_host = np.asarray(pi) if method == "pfedwn" else None
             if method == "pfedwn":
-                history["pi"].append(np.asarray(pi))
+                history["pi"].append(pi_host)
+            rec.record_eval(rnd - 1, target_acc=t_acc,
+                            mean_participant_acc=mean_acc,
+                            pi=None if pi_host is None else pi_host.tolist())
         history["max_target_acc"] = float(np.max(history["target_acc"]))
         self.last_run_stats = {"engine": "fused", "blocks": blocks,
                                "device_calls": len(blocks)}
@@ -415,14 +524,17 @@ class FederatedSimulation:
         fns, sim = self.fns, self.sim
         lr = sim.lr
 
+        # each phase returns (params, mean minibatch loss) — the same
+        # value_and_grad forward value the fused tap records, so the two
+        # engines' RunRecords agree numerically as well as in schema
         def sgd_steps(params, xs, ys):
             def step(p, batch):
                 x, y = batch
-                g = jax.grad(fns.loss)(p, x, y)
-                return jax.tree.map(lambda w, gw: w - lr * gw, p, g), None
+                l, g = jax.value_and_grad(fns.loss)(p, x, y)
+                return jax.tree.map(lambda w, gw: w - lr * gw, p, g), l
 
-            out, _ = jax.lax.scan(step, params, (xs, ys))
-            return out
+            out, losses = jax.lax.scan(step, params, (xs, ys))
+            return out, jnp.mean(losses)
 
         def prox_steps(params, anchor, xs, ys, active):
             def obj(p, x, y):
@@ -431,24 +543,24 @@ class FederatedSimulation:
 
             def step(p, batch):
                 x, y = batch
-                g = jax.grad(obj)(p, x, y)
-                return jax.tree.map(lambda w, gw: w - lr * gw, p, g), None
+                l, g = jax.value_and_grad(obj)(p, x, y)
+                return jax.tree.map(lambda w, gw: w - lr * gw, p, g), l
 
-            out, _ = jax.lax.scan(step, params, (xs, ys))
-            return out
+            out, losses = jax.lax.scan(step, params, (xs, ys))
+            return out, jnp.mean(losses)
 
         def maml_steps(params, xs, ys):
             half = xs.shape[1] // 2
 
             def step(p, batch):
                 x, y = batch
-                p = baselines.perfedavg_step(
+                p, l = baselines.perfedavg_step(
                     fns.loss, p, x[:half], y[:half], x[half:], y[half:],
                     sim.maml_inner_lr, lr)
-                return p, None
+                return p, l
 
-            out, _ = jax.lax.scan(step, params, (xs, ys))
-            return out
+            out, losses = jax.lax.scan(step, params, (xs, ys))
+            return out, jnp.mean(losses)
 
         def amp_steps(params, cloud, xs, ys):
             def obj(p, x, y):
@@ -457,11 +569,11 @@ class FederatedSimulation:
 
             def step(p, batch):
                 x, y = batch
-                g = jax.grad(obj)(p, x, y)
-                return jax.tree.map(lambda w, gw: w - lr * gw, p, g), None
+                l, g = jax.value_and_grad(obj)(p, x, y)
+                return jax.tree.map(lambda w, gw: w - lr * gw, p, g), l
 
-            out, _ = jax.lax.scan(step, params, (xs, ys))
-            return out
+            out, losses = jax.lax.scan(step, params, (xs, ys))
+            return out, jnp.mean(losses)
 
         def em_round(components, pi, x, y):
             _, pi_star, hist = em_refine_loop(
@@ -501,7 +613,7 @@ class FederatedSimulation:
                             stacked, tree)
 
     def _run_legacy(self, method: str) -> Dict[str, Any]:
-        sim = self.sim
+        sim, rec = self.sim, self.recorder
         jits = self._legacy_fns()
         params = self.params0
         pm = self.participants
@@ -512,19 +624,23 @@ class FederatedSimulation:
         history: Dict[str, Any] = {"target_acc": [], "pi": [],
                                    "mean_participant_acc": []}
         device_calls = 0
+        nbr_count = max(float(np.sum(np.asarray(pm))) - 1.0, 0.0)
 
         for rnd in range(sim.rounds):
+            t_round = time.perf_counter()
             key, k_sample, k_erase = jax.random.split(key, 3)
             idx = np.asarray(jits["sample_idx"](k_sample))   # host round-trip
             xs, ys = self._sample_batches(idx)
             device_calls += 1
+            link_rate, eff_nbr = 1.0, nbr_count
 
             if method == "local":
-                params = jits["local_all"](params, xs, ys)
+                params, train_loss = jits["local_all"](params, xs, ys)
+                eff_nbr = 0.0
                 device_calls += 1
 
             elif method == "fedavg":
-                params = jits["local_all"](params, xs, ys)
+                params, train_loss = jits["local_all"](params, xs, ys)
                 g = baselines.fedavg_aggregate(params, self.sizes, pm)
                 params = baselines.broadcast_global(g, params, pm)
                 device_calls += 3
@@ -532,13 +648,14 @@ class FederatedSimulation:
             elif method == "fedprox":
                 g = baselines.fedavg_aggregate(params, self.sizes, pm)
                 active = pm.astype(jnp.float32)
-                params = jits["prox_all"](params, g, xs, ys, active)
+                params, train_loss = jits["prox_all"](params, g, xs, ys,
+                                                      active)
                 g = baselines.fedavg_aggregate(params, self.sizes, pm)
                 params = baselines.broadcast_global(g, params, pm)
                 device_calls += 4
 
             elif method == "perfedavg":
-                params = jits["maml_all"](params, xs, ys)
+                params, train_loss = jits["maml_all"](params, xs, ys)
                 g = baselines.fedavg_aggregate(params, self.sizes, pm)
                 params = baselines.broadcast_global(g, params, pm)
                 device_calls += 3
@@ -547,11 +664,11 @@ class FederatedSimulation:
                 xi = baselines.fedamp_weights(params, sim.fedamp_sigma, pm,
                                               sim.fedamp_self_weight)
                 cloud = baselines.fedamp_cloud_models(params, xi)
-                params = jits["amp_all"](params, cloud, xs, ys)
+                params, train_loss = jits["amp_all"](params, cloud, xs, ys)
                 device_calls += 3
 
             elif method == "pfedwn":
-                params = jits["local_all"](params, xs, ys)
+                params, train_loss = jits["local_all"](params, xs, ys)
                 target = self._take(params, 0)
                 neighbors = jax.tree.map(
                     lambda p: p[jnp.asarray(neighbor_idx)], params)
@@ -569,34 +686,55 @@ class FederatedSimulation:
                     link_ok = jnp.ones((M,), bool)
                 mixed = aggregation.mix_params_with_erasures(
                     target, neighbors, pi, sim.alpha, link_ok)
-                mixed = jits["local_all"](
+                mixed, loss0 = jits["local_all"](
                     jax.tree.map(lambda p: p[None], mixed),
                     xs[0][None], ys[0][None])
                 params = self._put(params, 0, self._take(mixed, 0))
+                train_loss = train_loss.at[0].set(loss0[0])
+                link_rate = float(link_success_rate(link_ok))
+                eff_nbr = float(effective_neighbors(pi, link_ok))
                 device_calls += 5
             else:
                 raise ValueError(f"unknown method {method!r}")
 
+            if sim.taps:
+                # same scalars as the fused tap, recorded host-side
+                rec.record_round(
+                    rnd, train_loss=np.asarray(train_loss).tolist(),
+                    em_entropy=float(pi_entropy(pi)),
+                    link_success_rate=link_rate,
+                    effective_neighbors=eff_nbr)
+            rec.observe_round_latency(
+                (time.perf_counter() - t_round) * 1e3)
+
             if rnd % sim.eval_every == 0 or rnd == sim.rounds - 1:
-                tgt = self._take(params, 0)
-                if method == "perfedavg":
-                    d0 = self.train_sets[0]
-                    tgt = baselines.maml_adapt(
-                        self.fns.loss, tgt,
-                        jnp.asarray(d0.x[:sim.adapt_subset]),
-                        jnp.asarray(d0.y[:sim.adapt_subset]),
-                        sim.maml_inner_lr)
-                history["target_acc"].append(self._eval_target(tgt))
-                accs = []
-                for i in np.where(np.asarray(pm))[0]:
-                    d = self.test_sets[i]
-                    accs.append(float(self.fns.accuracy(
-                        self._take(params, int(i)), jnp.asarray(d.x),
-                        jnp.asarray(d.y))))
-                    device_calls += 1
-                history["mean_participant_acc"].append(float(np.mean(accs)))
-                if method == "pfedwn":
-                    history["pi"].append(np.asarray(pi))
+                with rec.span("eval", method=method, round=rnd):
+                    tgt = self._take(params, 0)
+                    if method == "perfedavg":
+                        d0 = self.train_sets[0]
+                        tgt = baselines.maml_adapt(
+                            self.fns.loss, tgt,
+                            jnp.asarray(d0.x[:sim.adapt_subset]),
+                            jnp.asarray(d0.y[:sim.adapt_subset]),
+                            sim.maml_inner_lr)
+                    history["target_acc"].append(self._eval_target(tgt))
+                    accs = []
+                    for i in np.where(np.asarray(pm))[0]:
+                        d = self.test_sets[i]
+                        accs.append(float(self.fns.accuracy(
+                            self._take(params, int(i)), jnp.asarray(d.x),
+                            jnp.asarray(d.y))))
+                        device_calls += 1
+                    history["mean_participant_acc"].append(
+                        float(np.mean(accs)))
+                    pi_host = np.asarray(pi) if method == "pfedwn" else None
+                    if method == "pfedwn":
+                        history["pi"].append(pi_host)
+                    rec.record_eval(
+                        rnd, target_acc=history["target_acc"][-1],
+                        mean_participant_acc=(
+                            history["mean_participant_acc"][-1]),
+                        pi=None if pi_host is None else pi_host.tolist())
         history["max_target_acc"] = float(np.max(history["target_acc"]))
         self.last_run_stats = {"engine": "legacy",
                                "device_calls": device_calls}
@@ -608,6 +746,18 @@ class FederatedSimulation:
         method = method.lower()
         if method not in METHODS:
             raise ValueError(f"unknown method {method!r}; have {METHODS}")
-        if self.sim.fused:
-            return self._run_fused(method)
-        return self._run_legacy(method)
+        sim, rec = self.sim, self.recorder
+        engine = "fused" if sim.fused else "legacy"
+        rec.begin_run(method=method, engine=engine, meta={
+            "n_clients": self.n, "rounds": sim.rounds,
+            "eval_every": sim.eval_every, "batch_size": sim.batch_size,
+            "lr": sim.lr, "seed": sim.seed, "taps": sim.taps,
+            "steps_per_round": self.steps_per_round})
+        history = (self._run_fused(method) if sim.fused
+                   else self._run_legacy(method))
+        rec.end_run(method=method, engine=engine, rounds=sim.rounds,
+                    max_target_acc=history["max_target_acc"],
+                    final_target_acc=history["target_acc"][-1],
+                    extra={"device_calls":
+                           self.last_run_stats["device_calls"]})
+        return history

@@ -33,6 +33,29 @@ class ModelFns(NamedTuple):
     accuracy: Callable[[PyTree, jax.Array, jax.Array], jax.Array]
 
 
+def pi_entropy(pi: jax.Array) -> jax.Array:
+    """Shannon entropy of the EM weight vector π — the concentration
+    diagnostic the metrics tap records each round (log M for uniform
+    weights, → 0 as EM locks onto one neighbor). Safe for empty π (0.0)
+    and for weights at the ``em_min_weight`` floor."""
+    p = jnp.clip(pi, 1e-12, 1.0)
+    return -jnp.sum(p * jnp.log(p))
+
+
+def effective_neighbors(pi: jax.Array, link_ok: jax.Array | None = None
+                        ) -> jax.Array:
+    """Effective number of neighbors contributing to the target's update:
+    the inverse Simpson index 1/Σ π̃²_m of the (optionally erasure-gated)
+    weights renormalized over surviving links. Equals M for uniform
+    weights with all links up, 1.0 when one neighbor dominates, and 0.0
+    when every link failed (or there are no neighbors)."""
+    w = pi if link_ok is None else pi * link_ok.astype(pi.dtype)
+    s = jnp.sum(w)
+    wn = w / jnp.maximum(s, 1e-12)
+    eff = 1.0 / jnp.maximum(jnp.sum(wn * wn), 1e-12)
+    return jnp.where(s > 0, eff, 0.0).astype(jnp.float32)
+
+
 def component_losses(fns: ModelFns, components: PyTree, x: jax.Array,
                      y: jax.Array) -> jax.Array:
     """Per-sample losses of every component model on the target's data.

@@ -66,3 +66,14 @@ def link_success_mask(key, p_err: jax.Array,
     """
     out_shape = p_err.shape if shape is None else tuple(shape) + p_err.shape
     return jax.random.uniform(key, out_shape) >= p_err
+
+
+def link_success_rate(link_ok: jax.Array) -> jax.Array:
+    """Fraction of this round's D2D links that survived erasure — the
+    channel health scalar the simulator's metrics tap records every round.
+    An empty neighbor set reports 1.0 (no link failed). Traceable: the
+    empty-set guard is on the static shape, so it folds away under
+    jit/vmap/scan."""
+    if link_ok.size == 0:
+        return jnp.float32(1.0)
+    return jnp.mean(link_ok.astype(jnp.float32))

@@ -1,0 +1,32 @@
+"""Telemetry subsystem: metrics core, span tracing, and RunRecords.
+
+Three layers (see ``docs/observability.md``):
+
+  - :mod:`repro.obs.metrics` — counters / gauges / histograms / per-round
+    timeseries behind a :class:`MetricsRegistry`.
+  - :mod:`repro.obs.trace` — ``obs.span(...)`` / ``@obs.traced`` host-side
+    wall-clock spans, exported as Chrome-trace JSON (Perfetto-loadable),
+    with XLA compile events carrying FLOP/byte estimates.
+  - :mod:`repro.obs.record` — the :class:`RunRecorder` facade writing the
+    structured JSONL ``RunRecord`` consumed by ``python -m
+    repro.obs.report``.
+
+The federated simulator owns a recorder per instance; device-side metric
+taps ride the fused engine's scan outputs and drain only at eval
+boundaries, so recording never adds host syncs to the round loop.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               Timeseries)
+from repro.obs.record import (SCHEMA_VERSION, JsonlSink, MemorySink,
+                              RunRecorder, encode_event, validate_event,
+                              validate_jsonl_lines)
+from repro.obs.trace import (Span, Tracer, get_tracer, set_tracer, span,
+                             traced, use_tracer)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "Timeseries",
+    "SCHEMA_VERSION", "JsonlSink", "MemorySink", "RunRecorder",
+    "encode_event", "validate_event", "validate_jsonl_lines",
+    "Span", "Tracer", "get_tracer", "set_tracer", "span", "traced",
+    "use_tracer",
+]

@@ -1,0 +1,271 @@
+"""Telemetry subsystem: metrics-core determinism (byte-identical JSONL),
+Chrome-trace schema validity, fused/legacy RunRecord parity, and the
+single-executable regression for the instrumented fused block."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import compat, obs
+from repro.configs.paper_cnn import CNNConfig
+from repro.core.fedsim import FederatedSimulation, FedSimConfig
+from repro.obs import report as obs_report
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.trace import Tracer
+from repro.data import (dirichlet_partition, make_client_datasets,
+                        synthetic_image_dataset, train_test_split)
+
+
+# --------------------------------------------------------------- fixtures
+
+def _tiny_setup(n_clients=4, seed=0):
+    model_cfg = CNNConfig(image_size=8, widths=(4,), hidden=16, n_classes=4)
+    base = synthetic_image_dataset(seed, 400, image_size=8, n_classes=4)
+    parts = dirichlet_partition(base.y, n_clients, alpha=0.3, seed=seed)
+    train = make_client_datasets(
+        base, [train_test_split(p, seed=1)[0] for p in parts])
+    test = make_client_datasets(
+        base, [train_test_split(p, seed=1)[1] for p in parts])
+    pm = np.array([True] * (n_clients - 1) + [False])
+    p_err = np.linspace(0.0, 0.2, n_clients).astype(np.float32)
+    return model_cfg, train, test, pm, p_err
+
+
+def _cfg(**kw):
+    base = dict(rounds=3, batch_size=16, lr=0.05, em_iters=2, em_subset=64,
+                adapt_subset=32, eval_every=2, seed=0)
+    base.update(kw)
+    return FedSimConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def recorded_pair():
+    """(fused, legacy) tiny sims, pfedwn already run on both."""
+    model_cfg, train, test, pm, p_err = _tiny_setup()
+    fused = FederatedSimulation(model_cfg, train, test, pm, p_err,
+                                _cfg(fused=True))
+    legacy = FederatedSimulation(model_cfg, train, test, pm, p_err,
+                                 _cfg(fused=False))
+    fused.run("pfedwn")
+    legacy.run("pfedwn")
+    return fused, legacy
+
+
+# ---------------------------------------------------------- metrics core
+
+def _drive(rec: obs.RunRecorder) -> None:
+    rec.begin_run(method="pfedwn", engine="fused",
+                  meta={"n_clients": 4, "rounds": 3})
+    rec.record_compile("pfedwn/block1",
+                       cost={"flops": 1e6, "bytes accessed": 2e5},
+                       seconds=1.5)
+    for rnd in range(3):
+        rec.record_round(rnd, train_loss=[1.5 - 0.1 * rnd, 1.2, 0.9, 1.1],
+                         em_entropy=1.0 - 0.2 * rnd,
+                         link_success_rate=2.0 / 3.0,
+                         effective_neighbors=1.8)
+        rec.observe_round_latency(12.5)
+    rec.record_eval(2, target_acc=0.75, mean_participant_acc=0.6,
+                    pi=[0.5, 0.3, 0.2])
+    rec.end_run(method="pfedwn", engine="fused", rounds=3,
+                max_target_acc=0.75, final_target_acc=0.75)
+
+
+def test_metrics_core_byte_identical_jsonl():
+    """Identical update sequences serialize to byte-identical JSONL (clock
+    injected, so even the meta timestamp is reproducible)."""
+    out = []
+    for _ in range(2):
+        rec = obs.RunRecorder(clock=lambda: 1234.5)
+        _drive(rec)
+        out.append(rec.memory.to_jsonl())
+    assert out[0] == out[1]
+    assert out[0].encode() == out[1].encode()
+    # and every line passes the schema validator
+    assert obs.validate_jsonl_lines(out[0].splitlines()) == []
+
+
+def test_metrics_registry_instruments():
+    m = MetricsRegistry()
+    m.counter("c").inc()
+    m.counter("c").inc(2)
+    m.gauge("g").set(0.5)
+    m.timeseries("t").append(0, 1.0)
+    m.timeseries("t").append(2, 3.0)
+    h = m.histogram("h")
+    for v in [1.0, 2.0, 3.0, 4.0, 100.0]:
+        h.observe(v)
+    snap = m.snapshot()
+    assert snap["counters"]["c"] == 3
+    assert snap["gauges"]["g"] == 0.5
+    assert snap["timeseries"]["t"] == {"steps": [0, 2], "values": [1.0, 3.0]}
+    assert snap["histograms"]["h"]["count"] == 5
+    assert snap["histograms"]["h"]["p50"] == 3.0
+    assert snap["histograms"]["h"]["p99"] == 100.0
+    m.reset()
+    assert m.snapshot()["counters"] == {}
+
+
+def test_histogram_weighted_observe_and_empty():
+    h = Histogram()
+    assert h.snapshot() == {"count": 0}
+    h.observe(10.0, n=4)
+    snap = h.snapshot()
+    assert snap["count"] == 4 and snap["p90"] == 10.0
+
+
+def test_validate_event_catches_violations():
+    assert obs.validate_event({"type": "nope"}) != []
+    assert any("missing key" in e
+               for e in obs.validate_event({"type": "round"}))
+    bad_engine = {"type": "meta", "schema": obs.SCHEMA_VERSION,
+                  "run_id": "x", "method": "local", "engine": "warp",
+                  "time_unix": 0.0, "meta": {}}
+    assert any("engine" in e for e in obs.validate_event(bad_engine))
+    assert obs.validate_jsonl_lines(["not json"]) != []
+
+
+# ---------------------------------------------------------- span tracing
+
+def test_chrome_trace_schema(tmp_path):
+    fake = iter(range(100))
+    tracer = Tracer(clock=lambda: next(fake) * 1e-3)
+    with tracer.span("outer", method="pfedwn") as sp:
+        sp.set(rounds=3)
+        with tracer.span("inner", cat="compile"):
+            pass
+    tracer.instant("mark")
+    info = tracer.add_compile_event(
+        "blk", cost={"flops": 5.0, "bytes accessed": 7.0}, seconds=0.25)
+    assert info == {"flops": 5.0, "bytes_accessed": 7.0}
+    path = tmp_path / "t.trace.json"
+    tracer.export(str(path))
+    doc = json.loads(path.read_text())
+    assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+    for ev in doc["traceEvents"]:
+        assert isinstance(ev["name"], str)
+        assert ev["ph"] in ("X", "i")
+        assert isinstance(ev["ts"], (int, float))
+        assert "pid" in ev and "tid" in ev
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert "outer" in names and "compile:blk" in names
+    outer = next(e for e in doc["traceEvents"] if e["name"] == "outer")
+    assert outer["args"]["rounds"] == 3
+
+
+def test_ambient_span_and_decorator():
+    tracer = Tracer()
+    with obs.use_tracer(tracer):
+        with obs.span("phase-a"):
+            pass
+
+        @obs.traced("phase-b")
+        def work():
+            return 42
+
+        assert work() == 42
+    names = [e["name"] for e in tracer.events]
+    assert names == ["phase-a", "phase-b"]
+    assert obs.get_tracer() is not tracer          # ambient restored
+
+
+# ----------------------------------------------- engine record integration
+
+def test_fused_legacy_record_schema_parity(recorded_pair):
+    """Both engines emit the same event sequence with the same keys, and
+    the device-tap scalars agree numerically (same index stream)."""
+    fused, legacy = recorded_pair
+    ef = fused.recorder.events
+    el = legacy.recorder.events
+    assert [e["type"] for e in ef if e["type"] != "compile"] == \
+        [e["type"] for e in el if e["type"] != "compile"]
+    by_type_f = {e["type"]: e for e in ef}
+    by_type_l = {e["type"]: e for e in el}
+    for etype in ("meta", "round", "eval", "summary"):
+        assert set(by_type_f[etype]) == set(by_type_l[etype]), etype
+    rf = [e for e in ef if e["type"] == "round"]
+    rl = [e for e in el if e["type"] == "round"]
+    assert len(rf) == len(rl) == 3
+    for a, b in zip(rf, rl):
+        np.testing.assert_allclose(a["train_loss"], b["train_loss"],
+                                   atol=5e-3)
+        np.testing.assert_allclose(a["em_entropy"], b["em_entropy"],
+                                   atol=1e-3)
+        assert a["link_success_rate"] == pytest.approx(
+            b["link_success_rate"])
+        np.testing.assert_allclose(a["effective_neighbors"],
+                                   b["effective_neighbors"], atol=1e-3)
+    # schema valid end-to-end
+    for events in (ef, el):
+        lines = [obs.encode_event(e) for e in events]
+        assert obs.validate_jsonl_lines(lines) == []
+
+
+def test_fused_round_events_deterministic(recorded_pair):
+    """Same seed => byte-identical round/eval events from a fresh sim (the
+    tap path carries no wall-clock)."""
+    fused, _ = recorded_pair
+    model_cfg, train, test, pm, p_err = _tiny_setup()
+    again = FederatedSimulation(model_cfg, train, test, pm, p_err,
+                                _cfg(fused=True))
+    again.run("pfedwn")
+
+    def tap_lines(sim):
+        return [obs.encode_event(e) for e in sim.recorder.events
+                if e["type"] in ("round", "eval")]
+
+    assert tap_lines(fused) == tap_lines(again)
+
+
+def test_instrumented_block_still_single_executable(recorded_pair):
+    """With taps ON (the default), a round block still lowers to one
+    executable with no host callbacks — the tap rides the scan outputs."""
+    fused, _ = recorded_pair
+    assert fused.sim.taps
+    block = fused.block_fn("pfedwn")
+    lowered = block.lower(fused.initial_state(), 3)
+    text = lowered.as_text()
+    for marker in ("callback", "infeed", "outfeed", "CopyToHost"):
+        assert marker not in text, f"host transfer marker {marker!r}"
+    assert "while" in text
+    assert compat.cost_analysis(lowered.compile()).get("flops", 0.0) > 0
+    # ...and the run really synced only at the two eval boundaries
+    assert fused.last_run_stats["device_calls"] == 2
+
+
+def test_taps_off_drops_round_events():
+    model_cfg, train, test, pm, p_err = _tiny_setup(n_clients=3)
+    sim = FederatedSimulation(model_cfg, train, test, pm, p_err,
+                              _cfg(fused=True, taps=False, rounds=2,
+                                   eval_every=1))
+    sim.run("local")
+    types = [e["type"] for e in sim.recorder.events]
+    assert "round" not in types
+    assert "eval" in types and "summary" in types
+
+
+def test_run_record_files_and_report_cli(tmp_path, capsys):
+    model_cfg, train, test, pm, p_err = _tiny_setup(n_clients=3)
+    sim = FederatedSimulation(
+        model_cfg, train, test, pm, p_err,
+        _cfg(fused=True, rounds=2, eval_every=1,
+             record_dir=str(tmp_path), run_name="rec"))
+    sim.run("local")
+    jsonl = tmp_path / "rec.jsonl"
+    trace = tmp_path / "rec.trace.json"
+    assert jsonl.exists() and trace.exists()
+    assert obs.validate_jsonl_lines(
+        jsonl.read_text().splitlines()) == []
+    assert json.loads(trace.read_text())["traceEvents"]
+    assert obs_report.main([str(jsonl)]) == 0
+    out = capsys.readouterr().out
+    assert "local" in out and "fused" in out
+
+
+def test_report_cli_rejects_schema_violations(tmp_path, capsys):
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"type":"round","run_id":"x"}\n')
+    assert obs_report.main([str(bad)]) == 2
+    assert "SCHEMA VIOLATIONS" in capsys.readouterr().err
