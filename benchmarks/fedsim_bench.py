@@ -1,21 +1,28 @@
 """Federated-round-loop perf trajectory: fused scan-over-rounds engine vs
-the legacy host-driven loop, for all six methods at N=8 and N=32 clients.
+the legacy host-driven loop, for all six methods at N=8 and N=32 clients,
+plus the client-sharded engine swept over 1/2/4/8-device client meshes.
 
 Emits ``name,us_per_call,derived`` CSV lines (harness convention) and writes
 ``BENCH_fedsim.json`` at the repo root with before/after rounds-per-second —
 the "before" numbers are the legacy engine, the "after" numbers the fused
 engine, so later PRs can extend the trajectory instead of re-measuring the
-baseline.
+baseline. Every writer goes through ``_merge_write``, which read-updates the
+existing report and preserves top-level sections it doesn't own
+(``obs_overhead``, ``sharded``, ``pfedwn_hoist``, anything future).
 
-``smoke`` is the CI entry: a seconds-scale shape that runs both engines and
-asserts they still agree, so the bench harness can't silently rot.
+``smoke``/``sharded_smoke``/``obs_smoke`` are the CI entries: seconds-scale
+shapes that run the engines and assert they still agree, so the bench
+harness can't silently rot.
 """
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
+import tempfile
 import time
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -32,6 +39,7 @@ OUT_PATH = os.path.join(REPO_ROOT, "BENCH_fedsim.json")
 def build_sim(n_clients: int, *, fused: bool, rounds: int, eval_every: int,
               samples: int = 0, image_size: int = 8, batch: int = 32,
               seed: int = 0, taps: bool = True,
+              sharded: bool = False, shard_devices: Optional[int] = None,
               record_dir: str | None = None,
               run_name: str | None = None) -> FederatedSimulation:
     """All-participants network with mild random link error — the learning
@@ -60,6 +68,7 @@ def build_sim(n_clients: int, *, fused: bool, rounds: int, eval_every: int,
     cfg = FedSimConfig(rounds=rounds, batch_size=batch, lr=0.05, alpha=0.7,
                        em_iters=2, em_subset=32, adapt_subset=32,
                        eval_every=eval_every, seed=seed, fused=fused,
+                       sharded=sharded, shard_devices=shard_devices,
                        taps=taps, record_dir=record_dir, run_name=run_name)
     return FederatedSimulation(model_cfg, train_sets, test_sets, pm, p_err,
                                cfg)
@@ -118,21 +127,24 @@ def run(rounds: int = 8, eval_every: int = 1) -> Dict:
                 "fused = donated scan-over-rounds engine (after)",
         "results": results,
     }
-    # trajectory policy: entries other benches appended (obs_overhead)
-    # survive a re-run of the base sweep
+    # trajectory policy: a base-sweep re-run updates only its own keys;
+    # sections other benches appended (obs_overhead, sharded, ...) survive
+    return _merge_write(report)
+
+
+def _merge_write(updates: Dict) -> Dict:
+    """Read-update-write ``BENCH_fedsim.json``: only the top-level keys in
+    ``updates`` are replaced; unknown keys (obs_overhead, sharded, sections
+    future PRs add) pass through byte-identical. Returns the merged report."""
+    report: Dict = {}
     if os.path.exists(OUT_PATH):
         with open(OUT_PATH) as f:
-            prev = json.load(f)
-        if "obs_overhead" in prev:
-            report["obs_overhead"] = prev["obs_overhead"]
-    _write_report(report)
-    return report
-
-
-def _write_report(report: Dict) -> None:
+            report = json.load(f)
+    report.update(updates)
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=1)
         f.write("\n")
+    return report
 
 
 def obs_overhead(rounds: int = 8) -> Dict:
@@ -147,23 +159,20 @@ def obs_overhead(rounds: int = 8) -> Dict:
             f"{OUT_PATH} missing: run `python -m benchmarks.run --only "
             "fedsim_bench` first (obs_overhead extends the trajectory, it "
             "does not re-measure the baseline)")
-    with open(OUT_PATH) as f:
-        report = json.load(f)
     rps = {}
     for taps in (False, True):
         sim = build_sim(8, fused=True, rounds=rounds, eval_every=1,
                         taps=taps)
         rps[taps] = time_method(sim, "pfedwn", repeat=3)["rounds_per_sec"]
     overhead_pct = (rps[False] - rps[True]) / rps[False] * 100.0
-    report["obs_overhead"] = {
+    report = _merge_write({"obs_overhead": {
         "note": "fused pfedwn N=8, device-side metrics tap on vs off "
                 "(taps ride the round scan, drain at eval boundaries)",
         "rounds": rounds,
         "taps_off_rounds_per_sec": round(rps[False], 3),
         "taps_on_rounds_per_sec": round(rps[True], 3),
         "overhead_pct": round(overhead_pct, 2),
-    }
-    _write_report(report)
+    }})
     emit("fedsim_obs_overhead", 0.0,
          f"taps_on_rps={rps[True]:.2f};taps_off_rps={rps[False]:.2f};"
          f"overhead={overhead_pct:.2f}%")
@@ -173,13 +182,19 @@ def obs_overhead(rounds: int = 8) -> Dict:
 
 
 def obs_smoke() -> None:
-    """CI stage-4 entry (seconds): run a tiny instrumented fused simulation,
-    emit runs/obs_smoke.jsonl + Chrome trace, and validate the RunRecord
-    schema in-process. ci.sh follows up with `python -m repro.obs.report`
-    on the same file."""
+    """CI stage entry (seconds): run a tiny instrumented fused simulation,
+    emit obs_smoke.jsonl + Chrome trace, and validate the RunRecord schema
+    in-process. ci.sh follows up with `python -m repro.obs.report` on the
+    same file.
+
+    The artifacts land in ``$OBS_SMOKE_DIR`` when set (ci.sh points it at a
+    mktemp dir so CI runs never clobber real run records under runs/), and
+    in a fresh private temp dir otherwise."""
     from repro.obs import validate_jsonl_lines
     t0 = time.perf_counter()
-    out_dir = os.path.join(REPO_ROOT, "runs")
+    out_dir = os.environ.get("OBS_SMOKE_DIR") or tempfile.mkdtemp(
+        prefix="fedsim_obs_smoke_")
+    os.makedirs(out_dir, exist_ok=True)
     sim = build_sim(4, fused=True, rounds=3, eval_every=2, samples=400,
                     image_size=8, batch=16, record_dir=out_dir,
                     run_name="obs_smoke")
@@ -218,6 +233,127 @@ def smoke() -> None:
     assert sims["fused"].last_run_stats["device_calls"] == 2
     emit("fedsim_smoke", (time.perf_counter() - t0) * 1e6,
          f"parity_gap={gap:.1e};ok")
+
+
+def sharded_smoke() -> None:
+    """CI guard for the client-sharded engine (expects forced host devices
+    via XLA_FLAGS, as ci.sh sets): all six methods on a tiny shape, sharded
+    over a 4-device client mesh vs fused, identical seeds. rounds=2 with
+    eval_every=2 gives blocks [1, 1] — one executable per (method, engine),
+    which keeps the six-method sweep in CI seconds-to-a-minute territory."""
+    import jax
+    t0 = time.perf_counter()
+    n_dev = len(jax.devices())
+    if n_dev < 4:
+        raise RuntimeError(
+            f"sharded_smoke needs >=4 devices, have {n_dev}: run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    common = dict(rounds=2, eval_every=2, samples=400, image_size=8,
+                  batch=16)
+    fused = build_sim(4, fused=True, **common)
+    sharded = build_sim(4, fused=True, sharded=True, shard_devices=4,
+                        **common)
+    worst = 0.0
+    for method in METHODS:
+        hf, hs = fused.run(method), sharded.run(method)
+        gap = max(abs(a - b) for a, b in zip(hf["target_acc"],
+                                             hs["target_acc"]))
+        worst = max(worst, gap)
+        if gap > 5e-3:
+            raise AssertionError(
+                f"sharded/fused disagree on {method}: |Δacc|={gap:.4f}")
+    assert sharded.last_run_stats["engine"] == "sharded"
+    emit("fedsim_sharded_smoke", (time.perf_counter() - t0) * 1e6,
+         f"devices=4;methods={len(METHODS)};worst_gap={worst:.1e};ok")
+
+
+def _sharded_worker() -> None:
+    """Subprocess body for :func:`sharded_bench` — runs inside a forced
+    8-host-device JAX (XLA_FLAGS must be set before import, hence the
+    separate process) and prints one JSON dict on the last stdout line."""
+    import jax
+    rounds, n = 8, 32
+    out: Dict[str, Dict] = {}
+    for d in (1, 2, 4, 8):
+        sim = build_sim(n, fused=True, sharded=True, shard_devices=d,
+                        rounds=rounds, eval_every=1)
+        row: Dict[str, float] = {}
+        for method in ("fedavg", "pfedwn"):
+            t = time_method(sim, method)
+            row[f"{method}_rounds_per_sec"] = round(t["rounds_per_sec"], 3)
+            row[f"{method}_round_latency_ms"] = round(
+                t["round_latency_ms"], 2)
+        out[f"devices={d}"] = row
+    print(json.dumps({"results": out, "n_clients": n, "rounds": rounds,
+                      "platform": jax.devices()[0].platform}))
+
+
+def sharded_bench() -> Dict:
+    """Extend BENCH_fedsim.json with a ``sharded`` section: the client-
+    sharded engine at N=32 over 1/2/4/8-device client meshes (forced host
+    devices — all meshes share the same physical CPU, so the numbers
+    measure partitioning + collective overhead, not parallel speedup).
+    fedavg covers the psum-only exchange, pfedwn the all_gather + redundant
+    target path. The legacy/fused baselines are NOT re-measured."""
+    env = dict(os.environ)
+    env.update({"PYTHONPATH": "src",
+                "JAX_PLATFORMS": env.get("JAX_PLATFORMS", "cpu"),
+                "XLA_FLAGS": "--xla_force_host_platform_device_count=8"})
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "from benchmarks.fedsim_bench import _sharded_worker; "
+         "_sharded_worker()"],
+        capture_output=True, text=True, cwd=REPO_ROOT, env=env,
+        timeout=3600)
+    if r.returncode != 0:
+        raise RuntimeError(f"sharded worker failed:\n{r.stderr[-3000:]}")
+    worker = json.loads(r.stdout.strip().splitlines()[-1])
+    section = {
+        "note": "client-sharded scan engine, N=32, client mesh over D "
+                "forced host devices (single physical CPU: overhead sweep, "
+                "not a scaling claim); baselines above not re-measured",
+        "rounds": worker["rounds"],
+        "results": worker["results"],
+    }
+    report = _merge_write({"sharded": section})
+    for d, row in worker["results"].items():
+        emit(f"fedsim_sharded_{d.replace('=', '')}",
+             row["pfedwn_round_latency_ms"] * 1e3,
+             f"pfedwn_rps={row['pfedwn_rounds_per_sec']:.2f};"
+             f"fedavg_rps={row['fedavg_rounds_per_sec']:.2f}")
+    return report["sharded"]
+
+
+def hoist_bench(rounds: int = 8) -> Dict:
+    """Extend BENCH_fedsim.json with a ``pfedwn_hoist`` section: fused
+    pfedwn N=32 re-timed after hoisting the EM loop's per-iteration
+    component-stack touches (single-vjp E-step + refinement, dead final
+    refinement skipped). The ``results`` baseline rows are NOT re-measured;
+    the pre-hoist latency is read from the stored trajectory."""
+    if not os.path.exists(OUT_PATH):
+        raise RuntimeError(f"{OUT_PATH} missing: run fedsim_bench first")
+    with open(OUT_PATH) as f:
+        before = json.load(f)["results"]["N=32"]["pfedwn"]
+    sim = build_sim(32, fused=True, rounds=rounds, eval_every=1)
+    t = time_method(sim, "pfedwn", repeat=2)
+    section = {
+        "note": "fused pfedwn N=32 after the EM-loop hoist (one vjp touch "
+                "of the component stack per EM iteration; final dead "
+                "refinement dropped); before = the stored fused baseline, "
+                "which is kept unmeasured per the trajectory policy",
+        "rounds": rounds,
+        "before_round_latency_ms": before["fused_round_latency_ms"],
+        "after_round_latency_ms": round(t["round_latency_ms"], 2),
+        "after_rounds_per_sec": round(t["rounds_per_sec"], 3),
+        "speedup_vs_stored_baseline": round(
+            before["fused_round_latency_ms"] / t["round_latency_ms"], 2),
+    }
+    report = _merge_write({"pfedwn_hoist": section})
+    emit("fedsim_pfedwn_hoist", t["round_latency_ms"] * 1e3,
+         f"before_ms={section['before_round_latency_ms']};"
+         f"after_ms={section['after_round_latency_ms']};"
+         f"speedup={section['speedup_vs_stored_baseline']:.2f}x")
+    return report["pfedwn_hoist"]
 
 
 def main() -> None:

@@ -13,9 +13,15 @@
 # can't silently rot; it also asserts fused/legacy parity on that shape.
 #
 # Stage 4 — obs smoke: runs a tiny *instrumented* fused simulation that
-# emits a RunRecord JSONL + Chrome trace under runs/, then invokes
+# emits a RunRecord JSONL + Chrome trace into a mktemp dir (OBS_SMOKE_DIR —
+# never under runs/, so CI can't clobber real run records), then invokes
 # `python -m repro.obs.report` on the emitted file; the report CLI exits
 # non-zero on any RunRecord schema violation.
+#
+# Stage 5 — sharded smoke: forces 8 host devices (XLA_FLAGS, which must be
+# set before the JAX import — hence a fresh interpreter) and asserts the
+# client-sharded scan engine matches the fused engine on all six methods
+# over a real 4-device ("clients",) mesh.
 #
 # Tests are offline by policy: the property tests run on the vendored
 # deterministic engine (src/repro/testing) unless a real `hypothesis`
@@ -28,7 +34,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # probing GCP metadata; every test in this suite targets host devices
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-echo "== stage 1/4: import gate (pytest --collect-only) =="
+echo "== stage 1/5: import gate (pytest --collect-only) =="
 # quiet on success (the full collected-test list is noise), but surface
 # pytest's collection errors when the gate trips
 gate_log="$(mktemp)"
@@ -42,12 +48,19 @@ fi
 rm -f "$gate_log"
 trap - EXIT
 
-echo "== stage 2/4: tier-1 suite =="
+echo "== stage 2/5: tier-1 suite =="
 python -m pytest -x -q "$@"
 
-echo "== stage 3/4: benchmark smoke (fedsim_smoke) =="
+echo "== stage 3/5: benchmark smoke (fedsim_smoke) =="
 python -m benchmarks.run --only fedsim_smoke
 
-echo "== stage 4/4: obs smoke (instrumented run + RunRecord report) =="
+echo "== stage 4/5: obs smoke (instrumented run + RunRecord report) =="
+OBS_SMOKE_DIR="$(mktemp -d)"
+export OBS_SMOKE_DIR
+trap 'rm -rf "$OBS_SMOKE_DIR"' EXIT
 python -m benchmarks.run --only obs_smoke
-python -m repro.obs.report runs/obs_smoke.jsonl
+python -m repro.obs.report "$OBS_SMOKE_DIR/obs_smoke.jsonl"
+
+echo "== stage 5/5: sharded smoke (client mesh on forced host devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.run --only fedsim_sharded_smoke

@@ -58,6 +58,41 @@ def mix_params_with_erasures(own: PyTree, neighbors_stacked: PyTree,
     return jax.tree.map(mix, own, neighbors_stacked)
 
 
+# ------------------------------------------- client-axis collectives
+#
+# Helpers for the simulator's client-sharded engine: the stacked (N, ...)
+# client pytree is partitioned along a ("clients",) mesh axis, each shard
+# holds a contiguous (N/D, ...) slab, and all cross-client exchange happens
+# through these two primitives — a psum for the weighted global mean
+# (fedavg/fedprox/perfedavg) and one all_gather per round for the methods
+# that need every peer model (pfedwn's EM components, fedamp's attention).
+
+
+def client_weighted_mean(params_local: PyTree, w_local: jax.Array,
+                         axis_name: str = "clients") -> PyTree:
+    """Σ_n w_n·ω_n lowered to a psum over the client axis: every shard
+    contracts its local (S, ...) slab with its slice of the *globally
+    normalized* weights, then one model-sized all-reduce combines the
+    partial sums. Matches ``baselines.fedavg_aggregate`` up to float
+    summation order."""
+    def agg(p):
+        part = jnp.tensordot(w_local.astype(jnp.float32),
+                             p.astype(jnp.float32), axes=1)
+        return jax.lax.psum(part, axis_name).astype(p.dtype)
+
+    return jax.tree.map(agg, params_local)
+
+
+def gather_clients(params_local: PyTree,
+                   axis_name: str = "clients") -> PyTree:
+    """One all_gather of the stacked client models over the client axis:
+    (S, ...) shards -> the full replicated (N, ...) stack, in axis-index
+    order (matching the contiguous client partition)."""
+    return jax.tree.map(
+        lambda p: jax.lax.all_gather(p, axis_name, axis=0, tiled=True),
+        params_local)
+
+
 # -------------------------------------------------- production (pod axis)
 
 def pod_mix(params: PyTree, pi_matrix: jax.Array, alpha,

@@ -7,7 +7,7 @@ module runs the learning side for any of:
 
   local | fedavg | fedprox | perfedavg | fedamp | pfedwn
 
-Two execution engines share the same round mathematics:
+Three execution engines share the same round mathematics:
 
   **fused** (default, ``FedSimConfig.fused=True``): all train/test tensors
   live on device from ``__init__`` (padded + stacked via
@@ -19,11 +19,27 @@ Two execution engines share the same round mathematics:
   one vmapped call over all participants (``cnn.masked_accuracy`` on the
   padded test stack).
 
+  **sharded** (``FedSimConfig.sharded=True``): the fused round block under
+  ``repro.compat.shard_map`` over a ``("clients",)`` mesh — clients are a
+  server-free D2D population, i.e. naturally data-parallel. The stacked
+  per-client state (params, opt state, device-resident data, tap buffers)
+  is partitioned along the client axis and every cross-client exchange is
+  an explicit collective: a ``psum`` for the fedavg/fedprox/perfedavg
+  global mean, ONE per-round ``all_gather`` of the peer models for
+  pfedwn's EM components and fedamp's attention (hoisted out of the EM
+  iteration loop — collectives ride the scan, never the inner loops), and
+  a psum-reduced vmapped eval. The sharded block keeps every fused-engine
+  invariant: donated, one executable per (method, block length), no host
+  callbacks, device-side taps riding the scan, and the same ``jax.random``
+  index stream (drawn replicated, sliced locally), so sharded == fused ==
+  legacy trajectories per method. ``shard_devices`` picks the mesh size
+  (default: every visible device); it must divide N.
+
   **legacy** (``fused=False``): the original host-driven loop — per-round
   numpy batch materialization + upload, one jitted dispatch per phase, and
   a Python per-client eval loop. Kept callable for parity testing and
-  debugging; it draws the *same* ``jax.random`` index stream as the fused
-  engine, so identical seeds produce identical trajectories (the parity
+  debugging; it draws the *same* ``jax.random`` index stream as the other
+  engines, so identical seeds produce identical trajectories (the parity
   tests assert this).
 
 Paper fidelity notes:
@@ -62,8 +78,9 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import obs
+from repro import compat, obs
 from repro.configs.base import PFLConfig
 from repro.configs.paper_cnn import CNNConfig
 from repro.core import aggregation, baselines
@@ -72,6 +89,8 @@ from repro.core.pfedwn import (ModelFns, effective_neighbors, em_refine_loop,
 from repro.core.selection import link_success_mask, link_success_rate
 from repro.data.synthetic import SyntheticImageDataset, stack_datasets
 from repro.models import cnn
+from repro.sharding.rules import (client_axis_spec, client_stack_shardings,
+                                  client_tap_spec)
 
 PyTree = Any
 
@@ -96,6 +115,8 @@ class FedSimConfig:
     eval_every: int = 1
     seed: int = 0
     fused: bool = True                 # scan-over-rounds engine (see module doc)
+    sharded: bool = False              # scan engine under shard_map("clients")
+    shard_devices: Optional[int] = None  # client-mesh size (None: all devices)
     em_uniform: bool = False           # ablation: uniform π instead of EM
     taps: bool = True                  # device-side per-round metrics tap
     record_dir: Optional[str] = None   # persist RunRecord JSONL + trace here
@@ -149,16 +170,26 @@ class FederatedSimulation:
         self._m = len(self._neighbor_idx)
         self._stage_data()
         self._blocks: Dict[str, Any] = {}      # method -> donated block jit
-        self._block_execs: Dict[Tuple[str, int], Any] = {}  # AOT-compiled
+        self._block_execs: Dict[Tuple, Any] = {}  # (engine, method, len) AOT
         self._legacy: Dict[str, Any] = {}      # per-phase jits, built lazily
+        self._sharded_blocks: Dict[str, Any] = {}
+        self._client_mesh = None               # built on first sharded run
+        self._sharded_data: Optional[Tuple] = None
         self.last_run_stats: Dict[str, Any] = {}
+
+    @property
+    def engine(self) -> str:
+        """Active engine name: ``sharded`` wins over ``fused``/``legacy``."""
+        if self.sim.sharded:
+            return "sharded"
+        return "fused" if self.sim.fused else "legacy"
 
     def _default_recorder(self) -> obs.RunRecorder:
         """In-memory RunRecorder, persisted when ``record_dir`` is set."""
         sim = self.sim
         jsonl = trace = None
         if sim.record_dir:
-            engine = "fused" if sim.fused else "legacy"
+            engine = self.engine
             name = sim.run_name or f"fedsim_{engine}_N{self.n}_seed{sim.seed}"
             jsonl = os.path.join(sim.record_dir, f"{name}.jsonl")
             trace = os.path.join(sim.record_dir, f"{name}.trace.json")
@@ -205,6 +236,9 @@ class FederatedSimulation:
         self._blocks.clear()
         self._block_execs.clear()
         self._legacy.clear()
+        self._sharded_blocks.clear()
+        self._sharded_data = None
+        self._client_mesh = None
 
     # ---------------------------------------------------- shared round math
     #
@@ -245,26 +279,14 @@ class FederatedSimulation:
 
         return sgd_one
 
-    def _make_round_body(self, method: str):
-        """Build ``body(state, _) -> (state, tap)`` for one round of
-        `method`. state = (params (N,...), pi (M,), key); ``tap`` is the
-        per-round metrics dict when ``sim.taps`` (stacked by the block scan,
-        drained at eval boundaries) or None when taps are off."""
+    def _trainers(self) -> Dict[str, Any]:
+        """The per-client trainer closures shared by the fused and sharded
+        round bodies. Every ``*_all`` is a vmap over a leading client axis
+        and is indifferent to whether that axis is the full N-client stack
+        (fused) or one shard's S-client slab (sharded)."""
         sim, fns = self.sim, self.fns
-        taps_on = sim.taps
         lr, B = sim.lr, sim.batch_size
-        pm = self.participants
-        pmf = pm.astype(jnp.float32)
-        sizes = self.sizes
-        train_x, train_y = self._train_x, self._train_y
-        nbr = jnp.asarray(self._neighbor_idx)
-        M = self._m
-        x0, y0 = self._em_x, self._em_y
-        p_err_nbr = self.p_err[nbr] if M else jnp.zeros((0,), jnp.float32)
-        em_min_w = PFLConfig().em_min_weight
-        sample_idx = self._sample_idx_fn()
         sgd_one = self._sgd_one_fn()
-        local_all = jax.vmap(sgd_one)
 
         def prox_one(p, anchor, active, dx, dy, idx):
             # single pass over all clients: the prox pull is gated by
@@ -281,8 +303,6 @@ class FederatedSimulation:
             out, losses = jax.lax.scan(step, p, idx)
             return out, jnp.mean(losses)
 
-        prox_all = jax.vmap(prox_one, in_axes=(0, None, 0, 0, 0, 0))
-
         def maml_one(p, dx, dy, idx):
             half = B // 2
 
@@ -296,8 +316,6 @@ class FederatedSimulation:
             out, losses = jax.lax.scan(step, p, idx)
             return out, jnp.mean(losses)
 
-        maml_all = jax.vmap(maml_one)
-
         def amp_one(p, cloud, dx, dy, idx):
             def obj(pp, x, y):
                 return fns.loss(pp, x, y) + baselines.prox_term(
@@ -310,7 +328,35 @@ class FederatedSimulation:
             out, losses = jax.lax.scan(step, p, idx)
             return out, jnp.mean(losses)
 
-        amp_all = jax.vmap(amp_one)
+        return {"sgd_one": sgd_one,
+                "local_all": jax.vmap(sgd_one),
+                "prox_all": jax.vmap(prox_one,
+                                     in_axes=(0, None, 0, 0, 0, 0)),
+                "maml_all": jax.vmap(maml_one),
+                "amp_all": jax.vmap(amp_one)}
+
+    def _make_round_body(self, method: str):
+        """Build ``body(state, _) -> (state, tap)`` for one round of
+        `method`. state = (params (N,...), pi (M,), key); ``tap`` is the
+        per-round metrics dict when ``sim.taps`` (stacked by the block scan,
+        drained at eval boundaries) or None when taps are off."""
+        sim, fns = self.sim, self.fns
+        taps_on = sim.taps
+        lr = sim.lr
+        pm = self.participants
+        pmf = pm.astype(jnp.float32)
+        sizes = self.sizes
+        train_x, train_y = self._train_x, self._train_y
+        nbr = jnp.asarray(self._neighbor_idx)
+        M = self._m
+        x0, y0 = self._em_x, self._em_y
+        p_err_nbr = self.p_err[nbr] if M else jnp.zeros((0,), jnp.float32)
+        em_min_w = PFLConfig().em_min_weight
+        sample_idx = self._sample_idx_fn()
+        tr = self._trainers()
+        sgd_one, local_all = tr["sgd_one"], tr["local_all"]
+        prox_all, maml_all, amp_all = (tr["prox_all"], tr["maml_all"],
+                                       tr["amp_all"])
 
         # non-collaborative / all-participant defaults for the tap scalars;
         # the pfedwn branch overwrites them with its channel-aware values
@@ -444,18 +490,24 @@ class FederatedSimulation:
                                            donate_argnums=(0,))
         return self._blocks[method]
 
-    def _compiled_block(self, method: str, length: int, state) -> Any:
-        """AOT-compiled executable for one (method, block length) shape,
-        cached; compilation is spanned and its FLOP/byte cost estimate is
-        recorded as a compile event."""
-        key = (method, int(length))
+    def _compiled_block(self, method: str, length: int, state,
+                        data: Optional[Tuple] = None) -> Any:
+        """AOT-compiled executable for one (engine, method, block length)
+        shape, cached; compilation is spanned and its FLOP/byte cost
+        estimate is recorded as a compile event. ``data`` is the sharded
+        engine's staged-stack argument (None for fused)."""
+        key = (self.engine, method, int(length))
         exe = self._block_execs.get(key)
         if exe is None:
-            block = self.block_fn(method)
+            if data is None:
+                block, args = self.block_fn(method), (state, length)
+            else:
+                block, args = self.sharded_block_fn(method), (state, data,
+                                                              length)
             t0 = time.perf_counter()
             with self.recorder.span("compile", cat="compile", method=method,
                                     rounds=length):
-                exe = block.lower(state, length).compile()
+                exe = block.lower(*args).compile()
             self.recorder.record_compile(
                 f"{method}/block{length}", compiled=exe,
                 seconds=time.perf_counter() - t0)
@@ -470,18 +522,317 @@ class FederatedSimulation:
         key = jax.random.PRNGKey(self.sim.seed + 7)
         return params, pi, key
 
-    def _run_fused(self, method: str) -> Dict[str, Any]:
+    # ------------------------------------------------------- sharded engine
+    #
+    # The fused round block under shard_map over a ("clients",) mesh. Each
+    # of D devices owns a contiguous slab of S = N/D clients — params and
+    # data stacks partitioned on their leading client axis, π/key/EM
+    # tensors replicated. Cross-client exchange is explicit collectives
+    # riding the round scan (never the inner EM/SGD loops): one psum for
+    # the fedavg-family global mean, ONE all_gather per round for
+    # pfedwn/fedamp peer models, and a psum-reduced eval. Small per-client
+    # (N,)-vectors (sizes, masks, P_err) stay replicated closure constants
+    # and are dynamic-sliced per shard; the minibatch index stream is drawn
+    # replicated at full (N, steps, B) and sliced locally, so the sharded
+    # trajectory matches fused/legacy bit-for-bit in expectation and to
+    # float tolerance in practice. Target-only math (EM, Eq-1 mix, the
+    # post-aggregation SGD pass) is computed redundantly on every shard
+    # (SPMD style — cheaper than a host round-trip or a point-to-point
+    # send) and written back only where the global client index is 0.
+
+    def _client_mesh_info(self) -> Tuple[Any, int, int]:
+        """(mesh, D, S): the ("clients",) mesh over the first D devices.
+        D = ``sim.shard_devices`` (default: every visible device) and must
+        divide N so each shard owns an equal contiguous slab of S clients."""
+        if self._client_mesh is None:
+            devs = jax.devices()
+            d = self.sim.shard_devices or len(devs)
+            if self.n % d != 0:
+                raise ValueError(
+                    f"client count N={self.n} must be divisible by the "
+                    f"client-mesh size D={d}")
+            if d > len(devs):
+                raise ValueError(
+                    f"shard_devices={d} but only {len(devs)} devices "
+                    f"are visible")
+            mesh = compat.make_mesh((d,), ("clients",),
+                                    devices=np.asarray(devs[:d]))
+            self._client_mesh = (mesh, d, self.n // d)
+        return self._client_mesh
+
+    def _stage_sharded(self) -> Tuple:
+        """Client-partitioned copies of the padded train/test stacks, laid
+        out once (leading N axis over "clients") and passed to every block
+        call as a non-donated argument — shard_map closure constants are
+        replicated, so anything client-sized must flow through in_specs."""
+        if self._sharded_data is None:
+            mesh, _, _ = self._client_mesh_info()
+
+            def put(x):
+                return jax.device_put(
+                    x, NamedSharding(mesh, client_axis_spec(x.ndim)))
+
+            with self.recorder.span("stage_sharded", n_clients=self.n):
+                self._sharded_data = tuple(
+                    put(x) for x in (self._train_x, self._train_y,
+                                     self._test_x, self._test_y,
+                                     self._test_mask))
+        return self._sharded_data
+
+    def initial_sharded_state(self) -> Tuple[PyTree, jax.Array, jax.Array]:
+        """:meth:`initial_state` values, placed on the client mesh: params
+        partitioned over "clients", π and the round key replicated."""
+        mesh, _, _ = self._client_mesh_info()
+        params, pi, key = self.initial_state()
+        rep = NamedSharding(mesh, P())
+        return (jax.device_put(params, client_stack_shardings(mesh, params)),
+                jax.device_put(pi, rep), jax.device_put(key, rep))
+
+    def _make_sharded_round_body(self, method: str, S: int):
+        """``make_body(tx, ty) -> body(state, _)``: the per-shard round body
+        factory. ``tx``/``ty`` are this shard's (S, ...) train slabs (bound
+        inside shard_map); state = (params slab (S, ...), π (M,) replicated,
+        key replicated). Mirrors :meth:`_make_round_body` step for step —
+        same trainers, same ``jax.random`` stream — with the cross-client
+        reads lowered to the two ``aggregation`` collectives."""
+        sim, fns = self.sim, self.fns
+        taps_on = sim.taps
+        lr = sim.lr
+        pm = self.participants
+        pmf = pm.astype(jnp.float32)
+        nbr = jnp.asarray(self._neighbor_idx)
+        M = self._m
+        x0, y0 = self._em_x, self._em_y
+        p_err_nbr = self.p_err[nbr] if M else jnp.zeros((0,), jnp.float32)
+        em_min_w = PFLConfig().em_min_weight
+        sample_idx = self._sample_idx_fn()
+        tr = self._trainers()
+        sgd_one, local_all = tr["sgd_one"], tr["local_all"]
+        prox_all, maml_all, amp_all = (tr["prox_all"], tr["maml_all"],
+                                       tr["amp_all"])
+        # the target's own tensors, replicated: its EM/mix/post-agg update
+        # runs redundantly on every shard and lands only on global index 0
+        tx0, ty0 = self._train_x[0], self._train_y[0]
+        nbr_count = jnp.maximum(jnp.sum(pmf) - 1.0, 0.0)
+        # globally-normalized fedavg weights (replicated); each shard
+        # contracts its slice, the psum completes the sum over clients
+        w_glob = self.sizes * pmf
+        w_glob = w_glob / jnp.maximum(jnp.sum(w_glob), 1e-30)
+
+        def slab(a, ofs):
+            return jax.lax.dynamic_slice_in_dim(a, ofs, S, 0)
+
+        def gmean(params, ofs):
+            return aggregation.client_weighted_mean(params, slab(w_glob, ofs))
+
+        def bcast(g, params, ofs):
+            # broadcast_global on the local slab: participants adopt g
+            pm_l = slab(pm, ofs)
+
+            def bc(gl, p):
+                m = pm_l.reshape((-1,) + (1,) * (p.ndim - 1))
+                return jnp.where(m, gl[None].astype(p.dtype), p)
+
+            return jax.tree.map(bc, g, params)
+
+        def make_body(tx, ty):
+            def body(state, _):
+                params, pi, key = state
+                ofs = jax.lax.axis_index("clients") * S
+                key, k_sample, k_erase = jax.random.split(key, 3)
+                idx = sample_idx(k_sample)       # replicated full-N draw:
+                idx_l = slab(idx, ofs)           # same stream as fused/legacy
+                link_rate = jnp.float32(1.0)
+
+                if method == "local":
+                    params, train_loss = local_all(params, tx, ty, idx_l)
+                    eff_nbr = jnp.float32(0.0)
+
+                elif method == "fedavg":
+                    params, train_loss = local_all(params, tx, ty, idx_l)
+                    params = bcast(gmean(params, ofs), params, ofs)
+                    eff_nbr = nbr_count
+
+                elif method == "fedprox":
+                    g = gmean(params, ofs)
+                    params, train_loss = prox_all(params, g, slab(pmf, ofs),
+                                                  tx, ty, idx_l)
+                    params = bcast(gmean(params, ofs), params, ofs)
+                    eff_nbr = nbr_count
+
+                elif method == "perfedavg":
+                    params, train_loss = maml_all(params, tx, ty, idx_l)
+                    params = bcast(gmean(params, ofs), params, ofs)
+                    eff_nbr = nbr_count
+
+                elif method == "fedamp":
+                    # one gather; attention rows for the local slab only
+                    allp = aggregation.gather_clients(params)
+                    xi = baselines.fedamp_weights(
+                        allp, sim.fedamp_sigma, pm, sim.fedamp_self_weight)
+                    xi_l = slab(xi, ofs)                        # (S, N)
+                    cloud_l = jax.tree.map(
+                        lambda p: jnp.einsum(
+                            "sm,m...->s...", xi_l.astype(jnp.float32),
+                            p.astype(jnp.float32)).astype(p.dtype), allp)
+                    params, train_loss = amp_all(params, cloud_l, tx, ty,
+                                                 idx_l)
+                    eff_nbr = nbr_count
+
+                elif method == "pfedwn":
+                    # 1. everyone trains locally on their shard
+                    params, train_loss = local_all(params, tx, ty, idx_l)
+                    # 2-4. ONE per-round gather of the peer stack; EM and
+                    # the erasure-gated Eq-1 mix run replicated
+                    allp = aggregation.gather_clients(params)
+                    target = jax.tree.map(lambda p: p[0], allp)
+                    neighbors = jax.tree.map(lambda p: p[nbr], allp)
+                    if sim.em_uniform:
+                        pi_new = jnp.full((M,), 1.0 / max(M, 1))
+                    else:
+                        _, pi_new, _ = em_refine_loop(
+                            fns, neighbors, pi, x0, y0, iters=sim.em_iters,
+                            lr=lr, min_weight=em_min_w,
+                            component_steps=sim.em_component_steps)
+                    if sim.erasures:
+                        link_ok = link_success_mask(k_erase, p_err_nbr)
+                    else:
+                        link_ok = jnp.ones((M,), bool)
+                    mixed = aggregation.mix_params_with_erasures(
+                        target, neighbors, pi_new, sim.alpha, link_ok)
+                    # 5. target post-aggregation pass, written back only on
+                    # the shard holding global client 0
+                    mixed, loss0 = sgd_one(mixed, tx0, ty0, idx[0])
+                    is0 = (jnp.arange(S) + ofs) == 0
+                    params = jax.tree.map(
+                        lambda s, t: jnp.where(
+                            is0.reshape((-1,) + (1,) * (s.ndim - 1)),
+                            t[None].astype(s.dtype), s),
+                        params, mixed)
+                    pi = pi_new
+                    train_loss = jnp.where(is0, loss0, train_loss)
+                    link_rate = link_success_rate(link_ok)
+                    eff_nbr = effective_neighbors(pi_new, link_ok)
+
+                else:
+                    raise ValueError(f"unknown method {method!r}")
+
+                tap = None
+                if taps_on:
+                    # train_loss is the (S,) local slab — reassembled to
+                    # (rounds, N) by the tap out_spec; scalars replicated
+                    tap = {"train_loss": train_loss,
+                           "em_entropy": pi_entropy(pi),
+                           "link_success_rate": link_rate,
+                           "effective_neighbors": eff_nbr}
+                return (params, pi, key), tap
+
+            return body
+
+        return make_body
+
+    def _make_sharded_eval(self, method: str, S: int):
+        """Per-shard eval: vmapped ``masked_accuracy`` on the local test
+        slab, psum-reduced to the participant mean; the target model is
+        extracted with a one-hot contraction + psum and scored (replicated)
+        against the target's test tensors."""
+        sim, fns = self.sim, self.fns
+        pmf = self.participants.astype(jnp.float32)
+        tex0, tey0 = self._test_x[0], self._test_y[0]
+        tem0 = self._test_mask[0]
+        ax, ay = self._adapt_x, self._adapt_y
+        denom = jnp.maximum(jnp.sum(pmf), 1.0)
+
+        def eval_fn(params, tex, tey, tem):
+            ofs = jax.lax.axis_index("clients") * S
+            is0f = ((jnp.arange(S) + ofs) == 0).astype(jnp.float32)
+            tgt = jax.tree.map(
+                lambda p: jax.lax.psum(
+                    jnp.tensordot(is0f, p.astype(jnp.float32), axes=1),
+                    "clients").astype(p.dtype),
+                params)
+            if method == "perfedavg":
+                tgt = baselines.maml_adapt(fns.loss, tgt, ax, ay,
+                                           sim.maml_inner_lr)
+            t_acc = cnn.masked_accuracy(tgt, tex0, tey0, tem0)
+            accs = jax.vmap(cnn.masked_accuracy)(params, tex, tey, tem)
+            pmf_l = jax.lax.dynamic_slice_in_dim(pmf, ofs, S, 0)
+            mean_acc = jax.lax.psum(jnp.sum(accs * pmf_l), "clients") / denom
+            return t_acc, mean_acc
+
+        return eval_fn
+
+    def sharded_block_fn(self, method: str):
+        """Sharded analogue of :meth:`block_fn`: the same scan-over-rounds
+        block wrapped in ``compat.shard_map`` over the client mesh —
+        donated state, one executable per (method, block length), taps
+        riding the scan, no host callbacks."""
+        method = method.lower()
+        if method not in self._sharded_blocks:
+            mesh, _, S = self._client_mesh_info()
+            make_body = self._make_sharded_round_body(method, S)
+            eval_fn = self._make_sharded_eval(method, S)
+            taps_on = self.sim.taps
+
+            p_specs = jax.tree.map(lambda p: client_axis_spec(p.ndim),
+                                   self.params0)
+            data_specs = tuple(
+                client_axis_spec(x.ndim)
+                for x in (self._train_x, self._train_y, self._test_x,
+                          self._test_y, self._test_mask))
+            tap_specs = None
+            if taps_on:
+                tap_specs = {"train_loss": client_tap_spec(2),
+                             "em_entropy": client_tap_spec(1),
+                             "link_success_rate": client_tap_spec(1),
+                             "effective_neighbors": client_tap_spec(1)}
+
+            def inner_of(length):
+                def inner(params, pi, key, tx, ty, tex, tey, tem):
+                    body = make_body(tx, ty)
+                    state, taps = jax.lax.scan(body, (params, pi, key),
+                                               None, length=length)
+                    params, pi, _ = state
+                    t_acc, mean_acc = eval_fn(params, tex, tey, tem)
+                    return state, (t_acc, mean_acc, pi, taps)
+
+                return inner
+
+            def block(state, data, length):
+                mapped = compat.shard_map(
+                    inner_of(length), mesh=mesh,
+                    in_specs=(p_specs, P(), P()) + data_specs,
+                    out_specs=((p_specs, P(), P()),
+                               (P(), P(), P(), tap_specs)),
+                    axis_names={"clients"}, check_vma=False)
+                return mapped(*state, *data)
+
+            self._sharded_blocks[method] = jax.jit(
+                block, static_argnums=(2,), donate_argnums=(0,))
+        return self._sharded_blocks[method]
+
+    def _run_scan(self, method: str) -> Dict[str, Any]:
+        """The block-scan driver shared by the fused and sharded engines:
+        only staging, the executable's argument list, and the cache key
+        differ — the drain/eval loop is identical."""
         sim, rec = self.sim, self.recorder
-        state = self.initial_state()
+        sharded = self.engine == "sharded"
+        if sharded:
+            data = self._stage_sharded()
+            state = self.initial_sharded_state()
+        else:
+            data = None
+            state = self.initial_state()
         blocks = block_schedule(sim.rounds, sim.eval_every)
         history: Dict[str, Any] = {"target_acc": [], "pi": [],
                                    "mean_participant_acc": []}
         rnd = 0
         for length in blocks:
-            exe = self._compiled_block(method, length, state)
+            exe = self._compiled_block(method, length, state, data)
             t0 = time.perf_counter()
             with rec.span("block_exec", method=method, rounds=length):
-                state, (t_acc, mean_acc, pi, taps) = exe(state)
+                state, (t_acc, mean_acc, pi, taps) = (
+                    exe(state, data) if sharded else exe(state))
                 # host sync happens here, once per eval boundary
                 t_acc, mean_acc = float(t_acc), float(mean_acc)
             rec.observe_round_latency(
@@ -508,7 +859,7 @@ class FederatedSimulation:
                             mean_participant_acc=mean_acc,
                             pi=None if pi_host is None else pi_host.tolist())
         history["max_target_acc"] = float(np.max(history["target_acc"]))
-        self.last_run_stats = {"engine": "fused", "blocks": blocks,
+        self.last_run_stats = {"engine": self.engine, "blocks": blocks,
                                "device_calls": len(blocks)}
         return history
 
@@ -747,14 +1098,14 @@ class FederatedSimulation:
         if method not in METHODS:
             raise ValueError(f"unknown method {method!r}; have {METHODS}")
         sim, rec = self.sim, self.recorder
-        engine = "fused" if sim.fused else "legacy"
+        engine = self.engine
         rec.begin_run(method=method, engine=engine, meta={
             "n_clients": self.n, "rounds": sim.rounds,
             "eval_every": sim.eval_every, "batch_size": sim.batch_size,
             "lr": sim.lr, "seed": sim.seed, "taps": sim.taps,
             "steps_per_round": self.steps_per_round})
-        history = (self._run_fused(method) if sim.fused
-                   else self._run_legacy(method))
+        history = (self._run_legacy(method) if engine == "legacy"
+                   else self._run_scan(method))
         rec.end_run(method=method, engine=engine, rounds=sim.rounds,
                     max_target_acc=history["max_target_acc"],
                     final_target_acc=history["target_acc"][-1],

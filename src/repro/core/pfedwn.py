@@ -90,20 +90,60 @@ def em_refine_loop(fns: ModelFns, components: PyTree, pi: jax.Array,
     """Algorithm 1 (bottom half): scan ``iters`` EM iterations — E-step
     posterior (Eq 9), M-step π update (Eq 10), and optional λ-weighted
     component refinement (Eq 11). The single EM body shared by
-    :func:`pfedwn_round` and the federated simulator's fused round engine.
+    :func:`pfedwn_round` and the federated simulator's round engines.
 
-    Returns (refined components, π*, π history (iters, M))."""
+    The neighbor-component stack is touched **once per EM iteration**, not
+    once per E-step *and* once per refinement step: a single ``jax.vjp``
+    through :func:`component_losses` yields the E-step loss matrix and is
+    pulled back with cotangent λ_im/Σ_i λ_im for the first Eq-11 SGD step
+    (the gradient of Σ_i λ_im ℓ_im / Σ_i λ_im is linear in the per-sample
+    losses, so the E-step's forward pass is the refinement's forward pass).
+    Two more hoists: with ``component_steps=0`` the loss matrix is loop
+    invariant and computed once for all ``iters``, and the *final*
+    iteration never refines — refined components exist solely to shape
+    later E-steps, so the last refinement (whose output nothing reads) is
+    dead work. π* and the π history are unchanged by all three.
+
+    Returns (components as seen by the final E-step, π*, π history
+    (iters, M))."""
+    if iters <= 0:
+        return components, pi, jnp.zeros((0,) + pi.shape, pi.dtype)
+
+    if component_steps == 0:
+        # fixed components: per-sample losses are loop-invariant, so the
+        # component stack is touched once and only the (tiny) π fixed-point
+        # iteration runs in the loop
+        losses = component_losses(fns, components, x, y)   # (n, M)
+
+        def pi_iter(pi_c, _):
+            pi_new = em.update_pi(em.posterior(pi_c, losses, min_weight))
+            return pi_new, pi_new
+
+        pi_star, pi_hist = jax.lax.scan(pi_iter, pi, None, length=iters)
+        return components, pi_star, pi_hist
+
+    def e_step(comps, pi_c):
+        losses, pullback = jax.vjp(
+            lambda c: component_losses(fns, c, x, y), comps)
+        lam = em.posterior(pi_c, losses, min_weight)
+        return lam, em.update_pi(lam), pullback
+
     def em_iter(carry, _):
         comps, pi_c = carry
-        losses = component_losses(fns, comps, x, y)       # (n, M)
-        lam = em.posterior(pi_c, losses, min_weight)
-        pi_new = em.update_pi(lam)
-        comps = refine_components(fns, comps, lam, x, y, lr,
-                                  component_steps) if component_steps else comps
+        lam, pi_new, pullback = e_step(comps, pi_c)
+        # first Eq-11 step via the E-step's own linearization
+        ct = lam / jnp.maximum(jnp.sum(lam, axis=0, keepdims=True), 1e-30)
+        (g,) = pullback(ct)
+        comps = jax.tree.map(lambda w, gw: w - lr * gw, comps, g)
+        if component_steps > 1:
+            comps = refine_components(fns, comps, lam, x, y, lr,
+                                      component_steps - 1)
         return (comps, pi_new), pi_new
 
-    (comps, pi_star), pi_hist = jax.lax.scan(
-        em_iter, (components, pi), None, length=iters)
+    (comps, pi_last), pi_hist = jax.lax.scan(
+        em_iter, (components, pi), None, length=iters - 1)
+    lam, pi_star, _ = e_step(comps, pi_last)     # final iteration: E/M only
+    pi_hist = jnp.concatenate([pi_hist, pi_star[None]], axis=0)
     return comps, pi_star, pi_hist
 
 

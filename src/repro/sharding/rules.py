@@ -111,6 +111,33 @@ def param_shardings(mesh, params_shape: PyTree, *, client_axis: bool = False
     return jax.tree_util.tree_map_with_path(leaf, params_shape)
 
 
+def client_axis_spec(ndim: int, axis: str = "clients") -> P:
+    """Spec for a client-stacked tensor: the leading N (client) dim shards
+    over ``axis``, everything after it stays local. Used for every tensor
+    the simulator's client-sharded engine partitions — the stacked CNN
+    params pytree, the padded train/test stacks, and the per-round tap
+    buffers (which carry the client axis in position 1, see
+    ``client_tap_spec``)."""
+    return P(axis, *([None] * (ndim - 1)))
+
+
+def client_stack_shardings(mesh, tree: PyTree, axis: str = "clients"
+                           ) -> PyTree:
+    """NamedShardings placing every leaf's leading client axis on ``axis``
+    (the stacked-CNN layout: each leaf is (N, *param_shape))."""
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, client_axis_spec(x.ndim, axis)), tree)
+
+
+def client_tap_spec(ndim: int, axis: str = "clients") -> P:
+    """Spec for a stacked per-round tap riding the round scan: axis 0 is
+    the round (scan) dim, axis 1 the client dim; scalar taps (ndim == 1,
+    rounds only) are replicated."""
+    if ndim <= 1:
+        return P(*([None] * ndim))
+    return P(None, axis, *([None] * (ndim - 2)))
+
+
 def batch_spec(name: str, ndim: int, *, client_axis: bool = False,
                pod_batch: bool = False) -> P:
     """Spec for a model input. client_axis: leading FL-client dim over "pod";

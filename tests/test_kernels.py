@@ -102,3 +102,54 @@ def test_chunked_attention_sliding_window():
     expect = ref.flash_attention_ref(q, k, v, causal=True, window=W)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                atol=2e-5, rtol=2e-5)
+
+
+# ------------------------- cross-module parity: kernels vs the core algebra
+#
+# The sweeps above pin the kernels to their jnp oracles in kernels.ref;
+# these pin them to the *simulator's* implementations — the EM E-step the
+# round engines actually run (core.em.posterior on CE losses) and the Eq-1
+# mix (core.aggregation.mix_params) — so the kernel and core paths can't
+# drift apart independently of the oracle file.
+
+
+def test_em_posterior_kernel_matches_core_em_posterior():
+    """λ from the fused CE+posterior kernel == em.posterior applied to the
+    cross-entropy losses ℓ_im = logsumexp_V(logits_m[i]) − logits_m[i, y_i]
+    (the identity the kernel exploits to skip materializing log-probs)."""
+    from repro.core import em
+    M, T, V = 3, 128, 512
+    ks = jax.random.split(KEY, 3)
+    pi = jax.nn.softmax(jax.random.normal(ks[0], (M,)))
+    logits = jax.random.normal(ks[1], (M, T, V), jnp.float32) * 3
+    labels = jax.random.randint(ks[2], (T,), 0, V)
+    lam = em_posterior(pi, logits, labels)
+    ce = (jax.nn.logsumexp(logits, axis=2)
+          - jnp.take_along_axis(logits, labels[None, :, None],
+                                axis=2)[..., 0])           # (M, T)
+    expect = em.posterior(pi, ce.T, min_weight=0.0)        # (T, M)
+    np.testing.assert_allclose(np.asarray(lam), np.asarray(expect),
+                               atol=1e-5)
+
+
+def test_weighted_agg_kernel_matches_aggregation_mix_params():
+    """The flat Eq-1 kernel == core.aggregation.mix_params on a stacked
+    params pytree, leaf-flattened the way the simulator would hand it off."""
+    from repro.core import aggregation
+    M, alpha = 4, 0.3
+    ks = jax.random.split(KEY, 4)
+    own_tree = {"w": jax.random.normal(ks[0], (7, 33)),
+                "b": jax.random.normal(ks[1], (13,))}
+    nbr_tree = {"w": jax.random.normal(ks[2], (M, 7, 33)),
+                "b": jax.random.normal(ks[3], (M, 13))}
+    pi = jax.nn.softmax(jnp.arange(M, dtype=jnp.float32))
+    expect = aggregation.mix_params(own_tree, nbr_tree, pi, alpha)
+    own_flat = jnp.concatenate(
+        [p.reshape(-1) for p in jax.tree.leaves(own_tree)])
+    nbr_flat = jnp.concatenate(
+        [p.reshape(M, -1) for p in jax.tree.leaves(nbr_tree)], axis=1)
+    out = weighted_agg(own_flat, nbr_flat, pi, alpha)
+    expect_flat = jnp.concatenate(
+        [p.reshape(-1) for p in jax.tree.leaves(expect)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect_flat),
+                               atol=1e-5, rtol=1e-5)

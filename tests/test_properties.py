@@ -128,3 +128,19 @@ def test_round_is_contraction_for_identical_data(alpha, seed):
     d_before = float(jnp.linalg.norm(target - opt))
     d_after = float(jnp.linalg.norm(new_w - opt))
     assert d_after <= d_before + 1e-5
+
+
+@given(st.integers(1, 200), st.integers(1, 50))
+@settings(max_examples=60, deadline=None)
+def test_block_schedule_partitions_rounds(rounds, eval_every):
+    """block_schedule is an exact partition of the round range whose block
+    boundaries are precisely the legacy engine's eval rounds
+    ({r : r % eval_every == 0 or r == rounds-1})."""
+    from repro.core.fedsim import block_schedule
+    blocks = block_schedule(rounds, eval_every)
+    assert all(b >= 1 for b in blocks)
+    assert sum(blocks) == rounds
+    boundaries = np.cumsum(blocks) - 1            # round index after each block
+    legacy = sorted(r for r in range(rounds)
+                    if r % eval_every == 0 or r == rounds - 1)
+    assert boundaries.tolist() == legacy
