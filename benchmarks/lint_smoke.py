@@ -1,0 +1,25 @@
+"""Lint smoke for the benchmark harness: the repo-wide source lint must be
+clean (exit-0 property) and the seeded violation fixtures must still fire
+every registered rule (the linter can't silently stop working). Prints the
+wall time of the full AST pass as the metric."""
+from __future__ import annotations
+
+import time
+
+from repro.lint import RULES, run_lint
+
+
+def main() -> None:
+    t0 = time.perf_counter()
+    findings = run_lint()
+    dt_us = (time.perf_counter() - t0) * 1e6
+    if findings:
+        raise AssertionError(
+            "repo lint not clean: "
+            + "; ".join(f"{f.path}:{f.line} {f.rule_id}" for f in findings[:5]))
+    fixture_findings = run_lint(["tests/fixtures/lint"])
+    silent = set(RULES) - {f.rule_id for f in fixture_findings}
+    if silent:
+        raise AssertionError(f"rules with no firing fixture: {sorted(silent)}")
+    print(f"lint_smoke,{dt_us:.0f},clean+{len(fixture_findings)}"
+          f"_fixture_findings")

@@ -11,7 +11,8 @@ import traceback
 
 from benchmarks import (ablations, fedsim_bench, fig1_gap, fig5_neighbors,
                         fig6_selection, fig8_em_weights, kernels_bench,
-                        roofline, table2_accuracy, table3_accuracy)
+                        lint_smoke, roofline, table2_accuracy,
+                        table3_accuracy)
 
 ALL = {
     "fig1_gap": fig1_gap.main,
@@ -30,6 +31,7 @@ ALL = {
     "fedsim_sharded_smoke": fedsim_bench.sharded_smoke,
     "fedsim_hoist": fedsim_bench.hoist_bench,
     "obs_smoke": fedsim_bench.obs_smoke,
+    "lint_smoke": lint_smoke.main,
 }
 
 

@@ -170,6 +170,21 @@ def shard_map(f, *, mesh, in_specs, out_specs,
                           out_specs=out_specs, check_rep=check_vma)
 
 
+# ------------------------------------------------------------ config probes
+
+def x64_enabled() -> bool:
+    """Whether double precision is on (``jax_enable_x64``). The one place
+    that reads ``jax.config`` directly — everything else asks compat, per
+    the compat-only-jax lint rule."""
+    return bool(jax.config.read("jax_enable_x64"))
+
+
+def default_float_dtype():
+    """float64 when x64 is enabled, else float32."""
+    import jax.numpy as jnp
+    return jnp.float64 if x64_enabled() else jnp.float32
+
+
 # ------------------------------------------------------------ cost analysis
 
 def cost_analysis(compiled) -> Dict[str, float]:

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs.base import WirelessConfig
 
 _QUAD_POINTS = 256
@@ -127,8 +128,7 @@ def error_probability(cfg: WirelessConfig, link_dist: jax.Array,
     hi = beta + 8.0 * float(np.sqrt(g))
     x = 0.5 * (nodes + 1) * (hi - beta) + beta
     w = weights * 0.5 * (hi - beta)
-    x = jnp.asarray(x, jnp.float64 if jax.config.read("jax_enable_x64")
-                    else jnp.float32)
+    x = jnp.asarray(x, compat.default_float_dtype())
     w = jnp.asarray(w, x.dtype)
 
     pdf = rayleigh_pdf(cfg, x)

@@ -1,0 +1,21 @@
+"""Static analysis for the standing architectural rules.
+
+Two layers:
+
+- **source lints** (:mod:`repro.lint.rules` / :mod:`repro.lint.source`) —
+  AST checks over the repo's Python (`python -m repro.lint`).
+- **compiled-artifact checks** (:mod:`repro.lint.hlo`) — invariants on
+  lowered/compiled round blocks (`python -m repro.lint.hlo`).
+
+See docs/lint.md for the rule catalog and suppression syntax.
+"""
+from repro.lint.findings import (Finding, finding_to_dict, format_finding,
+                                 sort_findings)
+from repro.lint.rules import RULES, FileContext, Rule
+from repro.lint.source import discover_files, lint_file, run_lint
+
+__all__ = [
+    "Finding", "finding_to_dict", "format_finding", "sort_findings",
+    "RULES", "FileContext", "Rule",
+    "discover_files", "lint_file", "run_lint",
+]

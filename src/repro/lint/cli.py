@@ -1,0 +1,77 @@
+"""``python -m repro.lint`` — run the source lints.
+
+Exit codes: 0 clean, 1 findings, 2 usage/internal error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.lint.findings import finding_to_dict, format_finding
+from repro.lint.rules import RULES
+from repro.lint.source import DEFAULT_DIRS, run_lint
+
+
+def build_parser() -> argparse.ArgumentParser:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="Repo source lints enforcing the standing architectural "
+                    "rules (see docs/lint.md).")
+    parser.add_argument(
+        "paths", nargs="*",
+        help=f"files/dirs to lint (default: {', '.join(DEFAULT_DIRS)})")
+    parser.add_argument(
+        "--select", action="append", default=None, metavar="RULE_ID",
+        help="run only this rule (repeatable)")
+    parser.add_argument(
+        "--format", choices=("text", "json"), default="text")
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule catalog and exit")
+    return parser
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = build_parser()
+    try:
+        args = parser.parse_args(argv)
+    except SystemExit as exc:
+        # argparse exits 2 on usage error, 0 on --help; pass both through
+        return int(exc.code or 0)
+
+    if args.list_rules:
+        for rule_id, rule in sorted(RULES.items()):
+            print(f"{rule_id} [{rule.severity}]: {rule.description}")
+        return 0
+
+    if args.select:
+        unknown = [r for r in args.select if r not in RULES]
+        if unknown:
+            print(f"unknown rule id(s): {', '.join(unknown)} "
+                  f"(see --list-rules)", file=sys.stderr)
+            return 2
+
+    try:
+        findings = run_lint(paths=args.paths or None, select=args.select)
+    except FileNotFoundError as exc:
+        print(f"no such path: {exc}", file=sys.stderr)
+        return 2
+
+    try:
+        if args.format == "json":
+            print(json.dumps([finding_to_dict(f) for f in findings],
+                             indent=2))
+        else:
+            for f in findings:
+                print(format_finding(f))
+            if findings:
+                print(f"{len(findings)} finding(s)")
+    except BrokenPipeError:      # downstream `| head` closed the pipe
+        sys.stderr.close()       # suppress the interpreter's epilogue noise
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,42 @@
+"""Finding model shared by both linter layers.
+
+A :class:`Finding` is one rule violation at one source location. Output
+ordering is fully deterministic: findings sort by (path, line, col,
+rule id, message), and the text format is one `path:line:col: severity
+rule-id: message` line per finding — stable across runs, machines, and
+input orderings, so CI diffs are meaningful.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation. ``path`` is repo-relative posix; ``line``/``col``
+    are 1-based (col 0 = whole-line/file-level finding)."""
+    path: str
+    line: int
+    col: int
+    rule_id: str
+    message: str
+    severity: str = "error"
+
+    def sort_key(self):
+        return (self.path, self.line, self.col, self.rule_id, self.message)
+
+
+def sort_findings(findings: Iterable[Finding]) -> List[Finding]:
+    """Deterministic output order, independent of discovery order."""
+    return sorted(findings, key=Finding.sort_key)
+
+
+def format_finding(f: Finding) -> str:
+    return f"{f.path}:{f.line}:{f.col}: {f.severity} {f.rule_id}: {f.message}"
+
+
+def finding_to_dict(f: Finding) -> Dict:
+    return dataclasses.asdict(f)

@@ -1,0 +1,392 @@
+"""Source-lint rules: the standing architectural rules as AST checks.
+
+Each rule inspects one parsed file (a :class:`FileContext`) and yields
+:class:`Finding`s. Rules are registered in :data:`RULES` under a stable ID
+(the ID is what suppression comments and ``--select`` refer to, so never
+rename one).
+
+The shared analyses live on :class:`FileContext`:
+
+  - **traced scope** — the set of function defs (and lambdas) that end up
+    inside a jit/vmap/grad/scan/shard_map trace. Detection is lexical and
+    name-based: a def is traced when its *name* is passed as the function
+    argument of a tracing call anywhere in the module (``jax.lax.scan(body,
+    ...)`` marks every local ``def body``), and nesting inside a traced def
+    propagates. This is a heuristic — a body returned from a factory and
+    traced under a different name in another module is missed — but it
+    covers the repo's engine layout (round bodies are module-local closures
+    handed straight to ``scan``/``jit``/``shard_map``) and costs nothing.
+  - **inner-loop bodies** — defs passed to ``lax.while_loop``/``fori_loop``.
+    The round scan itself is *not* an inner loop: collectives ride the scan
+    by standing rule, so only while/fori bodies and Python loops count.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+from repro.lint.findings import Finding
+
+# ----------------------------------------------------------- AST utilities
+
+_DEF_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+# calls whose function-valued arguments run inside a trace
+_TRACER_LAST = {"jit", "vmap", "pmap", "grad", "value_and_grad",
+                "checkpoint", "remat", "shard_map", "scan"}
+_LOOP_LAST = {"while_loop", "fori_loop"}
+
+_COLLECTIVE_LAST = {
+    # jax.lax collectives
+    "psum", "pmean", "pmax", "pmin", "all_gather", "all_to_all",
+    "ppermute", "pshuffle", "psum_scatter",
+    # this repo's cross-client exchange wrappers (core.aggregation)
+    "gather_clients", "client_weighted_mean",
+}
+
+_HOST_PULL_DOTTED = {
+    "jax.debug.print": "jax.debug.print",
+    "jax.debug.callback": "jax.debug.callback",
+    "jax.device_get": "jax.device_get",
+    "np.asarray": "numpy host pull (np.asarray)",
+    "np.array": "numpy host pull (np.array)",
+    "numpy.asarray": "numpy host pull (numpy.asarray)",
+    "numpy.array": "numpy host pull (numpy.array)",
+}
+_HOST_PULL_LAST = {
+    "io_callback": "io_callback",
+    "pure_callback": "pure_callback",
+    "block_until_ready": ".block_until_ready()",
+}
+
+_NETWORK_TOP_MODULES = {
+    "requests", "urllib", "urllib3", "http", "httpx", "aiohttp", "socket",
+    "socketserver", "ftplib", "smtplib", "telnetlib", "xmlrpc", "poplib",
+    "imaplib",
+}
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _last_segment(dotted: Optional[str]) -> Optional[str]:
+    return dotted.rsplit(".", 1)[-1] if dotted else None
+
+
+class FileContext:
+    """One parsed file plus the shared analyses rules draw on."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path                       # repo-relative posix
+        self.source = source
+        self.tree = tree
+        self.parents: Dict[int, ast.AST] = {}
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[id(child)] = parent
+        self.docstring_ids = self._collect_docstring_ids()
+        self._traced_ids, self._loop_body_ids = self._collect_scopes()
+
+    # -- docstrings (exempt from string-snippet scanning) --
+
+    def _collect_docstring_ids(self) -> Set[int]:
+        ids: Set[int] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.Module, ast.ClassDef, ast.FunctionDef,
+                                 ast.AsyncFunctionDef)):
+                body = getattr(node, "body", [])
+                if (body and isinstance(body[0], ast.Expr)
+                        and isinstance(body[0].value, ast.Constant)
+                        and isinstance(body[0].value.value, str)):
+                    ids.add(id(body[0].value))
+        return ids
+
+    # -- traced / inner-loop scope --
+
+    def _collect_scopes(self) -> Tuple[Set[int], Set[int]]:
+        defs_by_name: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs_by_name.setdefault(node.name, []).append(node)
+
+        traced: Set[int] = set()
+        loop_bodies: Set[int] = set()
+
+        def mark(arg: ast.AST, into: Set[int]) -> None:
+            if isinstance(arg, ast.Lambda):
+                into.add(id(arg))
+            elif isinstance(arg, ast.Name):
+                for d in defs_by_name.get(arg.id, []):
+                    into.add(id(d))
+
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            last = _last_segment(dotted_name(node.func))
+            if last in _TRACER_LAST and node.args:
+                mark(node.args[0], traced)
+            elif last == "while_loop":
+                for arg in node.args[:2]:      # (cond, body, init)
+                    mark(arg, loop_bodies)
+            elif last == "fori_loop" and len(node.args) >= 3:
+                mark(node.args[2], loop_bodies)  # (lo, hi, body, init)
+        return traced, loop_bodies
+
+    def _enclosing_defs(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, _DEF_NODES):
+                yield cur
+            cur = self.parents.get(id(cur))
+
+    def in_traced_scope(self, node: ast.AST) -> bool:
+        """Inside a def/lambda that a tracing call picks up (lax loop
+        bodies are traced by construction)."""
+        return any(id(d) in self._traced_ids or id(d) in self._loop_body_ids
+                   for d in self._enclosing_defs(node))
+
+    def in_inner_loop_body(self, node: ast.AST) -> bool:
+        return any(id(d) in self._loop_body_ids
+                   for d in self._enclosing_defs(node))
+
+    def in_python_loop(self, node: ast.AST) -> bool:
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, (ast.For, ast.AsyncFor, ast.While)):
+                return True
+            cur = self.parents.get(id(cur))
+        return False
+
+
+# ------------------------------------------------------------------- rules
+
+class Rule:
+    """Base: subclasses set ``id``/``severity``/``description`` and
+    implement :meth:`check`."""
+    id: str = ""
+    severity: str = "error"
+    description: str = ""
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: FileContext, node_or_line, message: str,
+                col: Optional[int] = None) -> Finding:
+        if isinstance(node_or_line, int):
+            line, c = node_or_line, col or 0
+        else:
+            line = getattr(node_or_line, "lineno", 1)
+            c = (getattr(node_or_line, "col_offset", -1) + 1
+                 if col is None else col)
+        return Finding(path=ctx.path, line=line, col=c, rule_id=self.id,
+                       message=message, severity=self.severity)
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register(cls):
+    rule = cls()
+    assert rule.id and rule.id not in RULES
+    RULES[rule.id] = rule
+    return cls
+
+
+# -- (a) compat-only-jax ----------------------------------------------------
+
+# textual forms matched inside non-docstring string literals (test
+# subprocess snippets); group 0 start is mapped back to a source line
+_SNIPPET_PATTERNS: List[Tuple[re.Pattern, str]] = [
+    (re.compile(r"\bjax\.sharding\.AxisType\b"), "jax.sharding.AxisType"),
+    (re.compile(r"\bjax\.shard_map\b"), "jax.shard_map"),
+    (re.compile(r"\bjax\.set_mesh\b"), "jax.set_mesh"),
+    (re.compile(r"\bjax\.config\.read\b"), "jax.config.read"),
+    (re.compile(r"\bjax\.make_mesh\s*\([^\n]*?\baxis_types\s*="),
+     "jax.make_mesh(axis_types=...)"),
+    (re.compile(r"\bfrom\s+jax\s+import\s+[\w,\s()*]*?"
+                r"\b(?:shard_map|set_mesh)\b"),
+     "from-jax import of shard_map/set_mesh"),
+    (re.compile(r"\bfrom\s+jax\.sharding\s+import\s+[\w,\s()*]*?"
+                r"\bAxisType\b"),
+     "from-jax.sharding import of AxisType"),
+    (re.compile(r"\bfrom\s+jax\.experimental(?:\.shard_map)?\s+import\s+"
+                r"[\w,\s()*]*?\bshard_map\b"),
+     "import of jax.experimental shard_map"),
+]
+
+_COMPAT_DOTTED = {
+    "jax.sharding.AxisType": "repro.compat.AxisType",
+    "jax.shard_map": "repro.compat.shard_map",
+    "jax.set_mesh": "repro.compat.set_mesh",
+    "jax.config.read": "a repro.compat feature probe (x64_enabled / has_*)",
+}
+
+
+@register
+class CompatOnlyJax(Rule):
+    """Compat-managed jax symbols must be reached through ``repro.compat``
+    (the installed jax 0.4.x lacks them; compat.py is the single file to
+    touch on a jax upgrade). Applies everywhere except compat.py itself and
+    the linter package (which must name the forbidden symbols), including
+    inside test-subprocess string snippets."""
+    id = "compat-only-jax"
+    description = ("direct use of compat-managed jax symbols "
+                   "(AxisType / shard_map / set_mesh / make_mesh axis_types "
+                   "/ config.read probes) outside repro/compat.py")
+
+    _EXEMPT = ("src/repro/compat.py",)
+    _EXEMPT_PREFIX = ("src/repro/lint/",)
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if ctx.path in self._EXEMPT or ctx.path.startswith(
+                self._EXEMPT_PREFIX):
+            return
+        for node in ast.walk(ctx.tree):
+            yield from self._check_node(ctx, node)
+
+    def _check_node(self, ctx, node) -> Iterator[Finding]:
+        if isinstance(node, ast.ImportFrom) and node.module:
+            names = {a.name for a in node.names}
+            if node.module == "jax.sharding" and "AxisType" in names:
+                yield self.finding(ctx, node,
+                                   "import AxisType from repro.compat, not "
+                                   "jax.sharding (absent on jax 0.4.x)")
+            if node.module == "jax" and names & {"shard_map", "set_mesh"}:
+                yield self.finding(ctx, node,
+                                   "import shard_map/set_mesh from "
+                                   "repro.compat, not jax")
+            if (node.module == "jax.experimental.shard_map"
+                    or (node.module == "jax.experimental"
+                        and "shard_map" in names)):
+                yield self.finding(ctx, node,
+                                   "use repro.compat.shard_map, not the "
+                                   "jax.experimental entry point")
+        elif isinstance(node, ast.Attribute):
+            dotted = dotted_name(node)
+            repl = _COMPAT_DOTTED.get(dotted or "")
+            if repl:
+                # only the full chain, not a parent read of it
+                parent = ctx.parents.get(id(node))
+                if not (isinstance(parent, ast.Attribute)):
+                    yield self.finding(
+                        ctx, node,
+                        f"{dotted} is compat-managed: use {repl} instead")
+        elif isinstance(node, ast.Call):
+            if dotted_name(node.func) == "jax.make_mesh" and any(
+                    kw.arg == "axis_types" for kw in node.keywords):
+                yield self.finding(
+                    ctx, node,
+                    "jax.make_mesh with axis_types=: use repro.compat."
+                    "make_mesh (the kwarg is absent on jax 0.4.x)")
+        elif (isinstance(node, ast.Constant) and isinstance(node.value, str)
+              and id(node) not in ctx.docstring_ids and "jax" in node.value):
+            for pat, what in _SNIPPET_PATTERNS:
+                for m in pat.finditer(node.value):
+                    line = node.lineno + node.value[:m.start()].count("\n")
+                    yield self.finding(
+                        ctx, line,
+                        f"string snippet uses {what}: route it through "
+                        f"repro.compat (snippets run under the same jax)")
+
+
+# -- (b) no-host-callback-in-round ------------------------------------------
+
+@register
+class NoHostCallbackInRound(Rule):
+    """No host callbacks or host pulls inside traced scope: round bodies,
+    trainer closures, and anything else that lowers into a compiled round
+    block must stay device-only (metrics ride the scan as outputs; host
+    syncs happen at eval boundaries)."""
+    id = "no-host-callback-in-round"
+    description = ("jax.debug.print/callback, io_callback, "
+                   ".block_until_ready(), np.asarray host pulls inside "
+                   "traced (jit/vmap/scan/shard_map) scope")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = dotted_name(node.func)
+            what = _HOST_PULL_DOTTED.get(dotted or "")
+            if what is None or what == "":
+                last = _last_segment(dotted)
+                what = _HOST_PULL_LAST.get(last or "")
+            if not what:
+                continue
+            if ctx.in_traced_scope(node):
+                yield self.finding(
+                    ctx, node,
+                    f"{what} inside traced scope breaks the single-"
+                    f"executable/no-host-callback round-block invariant "
+                    f"(return values as scan outputs instead)")
+
+
+# -- (c) collective-in-inner-loop -------------------------------------------
+
+@register
+class CollectiveInInnerLoop(Rule):
+    """Collectives ride the round scan, never an inner loop: a psum /
+    all_gather (or one of this repo's aggregation wrappers) inside a
+    lax.while_loop/fori_loop body or a Python loop re-pays the exchange
+    every iteration — gather once per round and reuse."""
+    id = "collective-in-inner-loop"
+    description = ("psum/all_gather/ppermute (or aggregation wrapper) calls "
+                   "nested under lax.while_loop/fori_loop bodies or Python "
+                   "loops")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            last = _last_segment(dotted_name(node.func))
+            if last not in _COLLECTIVE_LAST:
+                continue
+            if ctx.in_inner_loop_body(node):
+                yield self.finding(
+                    ctx, node,
+                    f"{last} inside a lax loop body: hoist the collective "
+                    f"out of the inner loop (collectives ride the scan, "
+                    f"once per round)")
+            elif ctx.in_python_loop(node):
+                yield self.finding(
+                    ctx, node,
+                    f"{last} inside a Python loop: unrolled per-iteration "
+                    f"collectives multiply exchange cost — gather once and "
+                    f"reuse")
+
+
+# -- (d) no-network-in-tests ------------------------------------------------
+
+@register
+class NoNetworkInTests(Rule):
+    """Offline-test policy: the suite runs with no network access; tests
+    must not import socket/HTTP client modules."""
+    id = "no-network-in-tests"
+    description = "network-capable imports (requests/urllib/socket/...) " \
+                  "inside tests/"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if not ctx.path.startswith("tests/"):
+            return
+        for node in ast.walk(ctx.tree):
+            mods: List[Tuple[ast.AST, str]] = []
+            if isinstance(node, ast.Import):
+                mods = [(node, a.name) for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                mods = [(node, node.module)]
+            for n, mod in mods:
+                if mod.split(".")[0] in _NETWORK_TOP_MODULES:
+                    yield self.finding(
+                        ctx, n,
+                        f"import of {mod}: tests are offline by policy "
+                        f"(ROADMAP standing rule)")

@@ -1,0 +1,151 @@
+"""Layer 1 driver: file discovery, suppression comments, rule execution.
+
+Discovery walks the default lint roots (``src/``, ``tests/``,
+``benchmarks/``, ``examples/``) for ``*.py``, skipping ``__pycache__`` and
+``fixtures`` directories — the seeded-violation fixtures under
+``tests/fixtures/lint/`` must not fail the repo-wide run, but linting them
+*explicitly* (``python -m repro.lint tests/fixtures/lint``) is how the CI
+gate proves every rule still fires.
+
+Suppressions are line-scoped comments::
+
+    x = jax.sharding.AxisType  # repro-lint: disable=compat-only-jax
+    y = something()            # repro-lint: disable   (all rules, use sparingly)
+
+A finding is dropped when a suppression for its rule (or a bare
+``disable``) sits on the finding's line.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.lint.findings import Finding, sort_findings
+from repro.lint.rules import RULES, FileContext
+
+DEFAULT_DIRS = ("src", "tests", "benchmarks", "examples")
+EXCLUDED_DIR_NAMES = {"__pycache__", "fixtures", ".git"}
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*disable(?:=([A-Za-z0-9_,\- ]+))?")
+
+
+def repo_root() -> pathlib.Path:
+    """src/repro/lint/source.py -> repo root is parents[3]."""
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def discover_files(paths: Sequence[str], root: Optional[pathlib.Path] = None,
+                   ) -> List[pathlib.Path]:
+    """Expand files/dirs into a sorted list of lintable .py files.
+
+    Explicitly named files are always included (even under ``fixtures``);
+    directory walks apply :data:`EXCLUDED_DIR_NAMES`.
+    """
+    root = root or repo_root()
+    out: Set[pathlib.Path] = set()
+    for p in paths:
+        path = pathlib.Path(p)
+        if not path.is_absolute():
+            path = root / path
+        if path.is_file():
+            if path.suffix == ".py":
+                out.add(path.resolve())
+        elif path.is_dir():
+            for sub in path.rglob("*.py"):
+                rel_parts = sub.relative_to(path).parts
+                if any(part in EXCLUDED_DIR_NAMES for part in rel_parts[:-1]):
+                    continue
+                out.add(sub.resolve())
+        else:
+            raise FileNotFoundError(str(path))
+    return sorted(out)
+
+
+def _relpath(path: pathlib.Path, root: pathlib.Path) -> str:
+    try:
+        return path.relative_to(root).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def suppressed_lines(source: str) -> Dict[int, Optional[Set[str]]]:
+    """Map line -> set of suppressed rule IDs (None = all rules).
+
+    Parsed from real COMMENT tokens, so a ``repro-lint: disable`` *inside a
+    string literal* does not suppress anything.
+    """
+    out: Dict[int, Optional[Set[str]]] = {}
+    try:
+        tokens = tokenize.generate_tokens(iter(source.splitlines(True)).__next__)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _SUPPRESS_RE.search(tok.string)
+            if not m:
+                continue
+            line = tok.start[0]
+            if m.group(1) is None:
+                out[line] = None
+            else:
+                ids = {part.strip() for part in m.group(1).split(",")
+                       if part.strip()}
+                prev = out.get(line, set())
+                out[line] = None if prev is None else (prev | ids)
+    except tokenize.TokenError:
+        pass  # syntax findings are reported by lint_file
+    return out
+
+
+def _is_suppressed(f: Finding, supp: Dict[int, Optional[Set[str]]]) -> bool:
+    ids = supp.get(f.line, _MISSING)
+    if ids is _MISSING:
+        return False
+    return ids is None or f.rule_id in ids
+
+
+_MISSING = object()
+
+
+def lint_file(path: pathlib.Path, root: Optional[pathlib.Path] = None,
+              select: Optional[Iterable[str]] = None) -> List[Finding]:
+    root = root or repo_root()
+    rel = _relpath(path, root)
+    try:
+        source = path.read_text(encoding="utf-8")
+    except (OSError, UnicodeDecodeError) as exc:
+        return [Finding(path=rel, line=1, col=0, rule_id="unreadable",
+                        message=f"cannot read file: {exc}")]
+    try:
+        tree = ast.parse(source, filename=rel)
+    except SyntaxError as exc:
+        return [Finding(path=rel, line=exc.lineno or 1,
+                        col=(exc.offset or 1), rule_id="syntax-error",
+                        message=f"file does not parse: {exc.msg}")]
+
+    ctx = FileContext(rel, source, tree)
+    rules = [RULES[r] for r in select] if select else list(RULES.values())
+    findings: List[Finding] = []
+    for rule in rules:
+        findings.extend(rule.check(ctx))
+
+    supp = suppressed_lines(source)
+    return [f for f in findings if not _is_suppressed(f, supp)]
+
+
+def run_lint(paths: Optional[Sequence[str]] = None,
+             root: Optional[pathlib.Path] = None,
+             select: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Lint ``paths`` (default: the repo's standard lint roots); returns
+    deterministically sorted findings."""
+    root = root or repo_root()
+    if not paths:
+        paths = [d for d in DEFAULT_DIRS if (root / d).is_dir()]
+    files = discover_files(paths, root=root)
+    findings: List[Finding] = []
+    for path in files:
+        findings.extend(lint_file(path, root=root, select=select))
+    return sort_findings(findings)

@@ -1,0 +1,31 @@
+"""Seeded no-host-callback-in-round violations: host pulls inside traced
+scope. Never imported — parsed only."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def body(carry, x):
+    jax.debug.print("round {}", carry)           # host callback in a scan
+    host = np.asarray(x)                         # host pull under trace
+    carry.block_until_ready()                    # sync inside the body
+    return carry + x, host
+
+
+def run(state, xs):
+    return jax.lax.scan(body, state, xs)
+
+
+def step(params):
+    jax.debug.callback(print, params)            # callback under jit
+    return params
+
+
+compiled = jax.jit(step)
+
+
+def timed(f, x):
+    # NOT traced: a host-side timing drain is fine outside the round block
+    y = f(x)
+    y.block_until_ready()
+    return np.asarray(y)

@@ -1,0 +1,31 @@
+"""Seeded collective-in-inner-loop violations. Never imported — parsed
+only (the aggregation import is not resolved)."""
+import jax
+
+from repro.core import aggregation
+
+
+def em_inner(i, carry):
+    # a gather inside a fori body: re-pays the exchange every EM iteration
+    peers = jax.lax.all_gather(carry, "clients")
+    return carry + peers.sum()
+
+
+def round_body(state, _):
+    out = jax.lax.fori_loop(0, 3, em_inner, state)
+    return out, None
+
+
+def refine(cond, inner_step, state):
+    return jax.lax.while_loop(cond, inner_step, state)
+
+
+def inner_step(carry):
+    return jax.lax.psum(carry, "clients")        # psum in a while body
+
+
+def host_sweep(stacks, weights):
+    total = 0.0
+    for stack in stacks:                          # unrolled python loop
+        total += aggregation.client_weighted_mean(stack, weights)
+    return total

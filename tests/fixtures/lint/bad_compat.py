@@ -1,0 +1,18 @@
+"""Seeded compat-only-jax violations (every form the rule must catch).
+
+Never imported — parsed only, by the linter's own tests and the CI gate.
+"""
+import jax
+from jax.sharding import AxisType                      # direct import
+
+axis = jax.sharding.AxisType                           # attribute chain
+mapper = jax.shard_map                                 # removed-API attr
+jax.set_mesh(None)                                     # removed-API call
+mesh = jax.make_mesh((1,), ("clients",), axis_types=(axis,))
+x64 = jax.config.read("jax_enable_x64")                # feature probe
+
+SNIPPET = """
+import jax
+m = jax.make_mesh((4,), ("clients",), axis_types=(jax.sharding.AxisType.Auto,))
+jax.set_mesh(m)
+"""

@@ -1,0 +1,10 @@
+"""Seeded offline-test-policy violations (tests are network-free). Never
+imported — parsed only."""
+import socket
+
+import requests
+from urllib.request import urlopen
+
+
+def fetch(url):
+    return requests.get(url) or urlopen(url) or socket.gethostname()

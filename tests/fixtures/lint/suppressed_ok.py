@@ -1,0 +1,16 @@
+"""Every violation here carries a suppression comment — the linter must
+report nothing for this file. Never imported — parsed only."""
+import jax
+import socket  # repro-lint: disable
+
+mapper = jax.shard_map  # repro-lint: disable=compat-only-jax
+probe = jax.config.read("jax_enable_x64")  # repro-lint: disable=compat-only-jax, no-network-in-tests
+
+
+def body(carry, x):
+    jax.debug.print("{}", carry)  # repro-lint: disable=no-host-callback-in-round
+    return carry + x, None
+
+
+def run(state, xs):
+    return jax.lax.scan(body, state, xs)

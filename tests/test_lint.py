@@ -1,0 +1,297 @@
+"""The linter linted: repo cleanliness, every rule fires on its fixture,
+suppressions, deterministic ordering, CLI exit codes, and the HLO-layer
+parser/checker on both canned and real compiled round blocks."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.lint import (RULES, Finding, format_finding, lint_file, run_lint,
+                        sort_findings)
+from repro.lint import hlo as lint_hlo
+from repro.lint.cli import main as cli_main
+from repro.lint.source import repo_root, suppressed_lines
+
+ROOT = repo_root()
+FIXTURES = ROOT / "tests" / "fixtures" / "lint"
+
+
+# ------------------------------------------------------------ layer 1: AST
+
+def test_repo_root_points_at_the_repo():
+    assert (ROOT / "src" / "repro" / "lint").is_dir()
+    assert ROOT == pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_repo_is_lint_clean():
+    """The exit-0-at-HEAD acceptance criterion, in-process."""
+    assert run_lint() == []
+
+
+def test_every_rule_fires_on_the_fixtures():
+    findings = run_lint([str(FIXTURES)])
+    fired = {f.rule_id for f in findings}
+    assert fired >= set(RULES), f"silent rules: {set(RULES) - fired}"
+    assert all(f.severity == "error" for f in findings)
+
+
+def test_fixture_dir_is_excluded_from_default_discovery():
+    """Seeded violations must not fail the repo-wide run (only explicit
+    paths reach into fixtures/)."""
+    assert not [f for f in run_lint(["tests"]) if "fixtures" in f.path]
+    assert run_lint([str(FIXTURES / "bad_network.py")])
+
+
+def test_compat_rule_catches_every_form():
+    findings = run_lint([str(FIXTURES / "bad_compat.py")])
+    msgs = [f.message for f in findings]
+    assert any("import AxisType" in m for m in msgs)          # ImportFrom
+    # the probe literals below would themselves trip the snippet scanner
+    assert any("jax.shard_map" in m for m in msgs)  # repro-lint: disable=compat-only-jax
+    assert any("jax.set_mesh" in m for m in msgs)  # repro-lint: disable=compat-only-jax
+    assert any("axis_types" in m for m in msgs)               # kwarg form
+    assert any("jax.config.read" in m for m in msgs)  # repro-lint: disable=compat-only-jax
+    snippet = [f for f in findings if "string snippet" in f.message]
+    assert snippet, "embedded test-subprocess snippets must be scanned"
+    # snippet findings point at the line *inside* the literal
+    src = (FIXTURES / "bad_compat.py").read_text().splitlines()
+    for f in snippet:
+        assert "jax." in src[f.line - 1]
+
+
+def test_callback_rule_is_scoped_to_traced_functions():
+    findings = run_lint([str(FIXTURES / "bad_callback.py")])
+    assert {f.rule_id for f in findings} == {"no-host-callback-in-round"}
+    flagged = {f.line for f in findings}
+    src = (FIXTURES / "bad_callback.py").read_text().splitlines()
+    # the host-side `timed` drain (block_until_ready + np.asarray outside
+    # any traced def) must NOT be flagged
+    timed_start = next(i for i, l in enumerate(src, 1)
+                       if l.startswith("def timed"))
+    assert all(line < timed_start for line in flagged)
+    assert len(findings) == 4
+
+
+def test_collective_rule_flags_lax_and_python_loops():
+    findings = run_lint([str(FIXTURES / "bad_collective.py")])
+    assert {f.rule_id for f in findings} == {"collective-in-inner-loop"}
+    assert any("lax loop body" in f.message for f in findings)
+    assert any("Python loop" in f.message for f in findings)
+    assert len(findings) == 3
+
+
+def test_suppressions_silence_findings():
+    assert lint_file(FIXTURES / "suppressed_ok.py", root=ROOT) == []
+
+
+def test_suppression_comment_parsing():
+    supp = suppressed_lines(
+        "x = 1  # repro-lint: disable\n"
+        "y = 2  # repro-lint: disable=rule-a, rule-b\n"
+        "z = 3\n")
+    assert supp[1] is None                      # bare disable = all rules
+    assert supp[2] == {"rule-a", "rule-b"}
+    assert 3 not in supp
+
+
+def test_suppression_inside_string_does_not_suppress():
+    supp = suppressed_lines('s = "# repro-lint: disable"\n')
+    assert supp == {}
+
+
+def test_output_is_deterministic_and_sorted():
+    a = run_lint([str(FIXTURES)])
+    b = run_lint([str(FIXTURES)])
+    assert a == b
+    assert a == sort_findings(reversed(a))
+    keys = [f.sort_key() for f in a]
+    assert keys == sorted(keys)
+
+
+def test_syntax_error_is_reported_not_raised(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    (finding,) = lint_file(bad, root=tmp_path)
+    assert finding.rule_id == "syntax-error"
+    assert finding.line == 1
+
+
+def test_format_finding_shape():
+    f = Finding(path="a/b.py", line=3, col=7, rule_id="r", message="m")
+    assert format_finding(f) == "a/b.py:3:7: error r: m"
+
+
+# ----------------------------------------------------------- CLI contract
+
+def _cli(*argv):
+    env = {"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "/usr/bin"),
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
+    return subprocess.run([sys.executable, "-m", "repro.lint", *argv],
+                          capture_output=True, text=True, cwd=str(ROOT),
+                          env=env, timeout=300)
+
+
+def test_cli_exit_codes_in_process():
+    assert cli_main([]) == 0                               # repo clean
+    assert cli_main([str(FIXTURES)]) == 1                  # findings
+    assert cli_main(["--select", "no-such-rule"]) == 2     # usage
+    assert cli_main(["no/such/path.py"]) == 2
+
+
+def test_cli_module_entry(capsys):
+    r = _cli("tests/fixtures/lint", "--select", "no-network-in-tests")
+    assert r.returncode == 1, r.stderr
+    assert "bad_network.py" in r.stdout
+    assert "finding(s)" in r.stdout
+    r0 = _cli("src/repro/lint")
+    assert r0.returncode == 0, (r0.stdout, r0.stderr)
+
+
+def test_cli_list_rules():
+    assert cli_main(["--list-rules"]) == 0
+
+
+# ------------------------------------------------- layer 2: HLO invariants
+
+_CANNED_OK = """\
+HloModule jit_block, input_output_alias={ {0}: (0, {}, may-alias) }
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(f32[] %a, f32[] %b)
+}
+
+%round_cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+%round_body (q: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %q = (s32[], f32[4]) parameter(0)
+  %x = f32[4]{0} get-tuple-element((s32[], f32[4]) %q), index=1
+  %ar = f32[4]{0} all-reduce(f32[4]{0} %x), replica_groups={{0,1}}, to_apply=%add, metadata={op_name="jit(block)/psum" source_file="a.py" source_line=10}
+  %ag = f32[8]{0} all-gather(f32[4]{0} %ar), replica_groups={{0,1}}, dimensions={0}, metadata={op_name="jit(block)/gather" source_file="a.py" source_line=11}
+  %i = s32[] get-tuple-element((s32[], f32[4]) %q), index=0
+  ROOT %t = (s32[], f32[4]) tuple(s32[] %i, f32[4]{0} %ar)
+}
+
+ENTRY %main (arg: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %arg = (s32[], f32[4]) parameter(0)
+  ROOT %w = (s32[], f32[4]) while((s32[], f32[4]) %arg), condition=%round_cond, body=%round_body
+}
+"""
+
+# the same module with the collectives pushed one while deeper (an inner
+# EM loop) — the depth-2 violation the checker must catch
+_CANNED_INNER = _CANNED_OK.replace(
+    "ENTRY %main", "%outer_cond (o: (s32[], f32[4])) -> pred[] {\n"
+    "  %o = (s32[], f32[4]) parameter(0)\n"
+    "  ROOT %lt2 = pred[] constant(true)\n"
+    "}\n\n"
+    "%outer_body (r: (s32[], f32[4])) -> (s32[], f32[4]) {\n"
+    "  %r = (s32[], f32[4]) parameter(0)\n"
+    "  ROOT %w0 = (s32[], f32[4]) while((s32[], f32[4]) %r), "
+    "condition=%round_cond, body=%round_body\n"
+    "}\n\n"
+    "ENTRY %main").replace(
+    "while((s32[], f32[4]) %arg), condition=%round_cond, body=%round_body",
+    "while((s32[], f32[4]) %arg), condition=%outer_cond, body=%outer_body")
+
+
+def test_hlo_canned_module_parses_and_passes():
+    report = lint_hlo.analyze_hlo_text(_CANNED_OK, flops=1.0)
+    assert report.donated and report.has_scan_loop
+    assert not report.host_markers and report.host_custom_calls == 0
+    kinds = {s.kind: s for s in report.sites}
+    assert kinds["reduce"].while_depth == 1
+    assert kinds["gather"].while_depth == 1
+    assert lint_hlo.check_round_block(
+        report, expect_collectives=True, expect_gather=True,
+        allow_f64=False) == []
+
+
+def test_hlo_detects_collective_in_inner_while():
+    # the canned "inner" module nests the collectives under a second while
+    report = lint_hlo.analyze_hlo_text(_CANNED_INNER, flops=1.0)
+    depths = {s.kind: s.while_depth for s in report.sites}
+    assert depths == {"reduce": 2, "gather": 2}
+    violations = lint_hlo.check_round_block(
+        report, expect_collectives=True, expect_gather=True, allow_f64=False)
+    assert any("inner loop body" in v for v in violations)
+
+
+def test_hlo_site_grouping_by_metadata():
+    # two leaves of one logical psum (same op_name/source_line) = one site
+    doubled = _CANNED_OK.replace(
+        "  %i = s32[]",
+        '  %ar2 = f32[4]{0} all-reduce(f32[4]{0} %x), replica_groups={{0,1}},'
+        ' to_apply=%add, metadata={op_name="jit(block)/psum"'
+        ' source_file="a.py" source_line=10}\n  %i = s32[]')
+    report = lint_hlo.analyze_hlo_text(doubled, flops=1.0)
+    (reduce_site,) = report.reduce_sites()
+    assert reduce_site.n_ops == 2
+
+
+def test_hlo_checker_flags_missing_invariants():
+    stripped = _CANNED_OK.replace(
+        ", input_output_alias={ {0}: (0, {}, may-alias) }", "")
+    report = lint_hlo.analyze_hlo_text(stripped, flops=0.0)
+    violations = lint_hlo.check_round_block(
+        report, expect_collectives=True, allow_f64=False)
+    assert any("donated" in v for v in violations)
+    assert any("zero flops" in v for v in violations)
+
+
+def test_hlo_flags_f64_when_x64_disabled():
+    doubled = _CANNED_OK.replace("f32[4]{0} %ar)", "f32[4]{0} %ar)").replace(
+        "%ag = f32[8]{0}", "%ag = f64[8]{0}")
+    report = lint_hlo.analyze_hlo_text(doubled, flops=1.0)
+    assert report.f64_ops == 1
+    violations = lint_hlo.check_round_block(
+        report, expect_collectives=True, expect_gather=True, allow_f64=False)
+    assert any("f64" in v for v in violations)
+    assert lint_hlo.check_round_block(
+        report, expect_collectives=True, expect_gather=True,
+        allow_f64=True) == []
+
+
+def test_hlo_detects_real_host_callback():
+    """A jitted function with a debug callback must show up as a host
+    custom-call in its compiled module."""
+    import jax
+    import jax.numpy as jnp
+
+    def noisy(x):
+        jax.debug.print("x={x}", x=x)  # repro-lint: disable=no-host-callback-in-round
+        return jnp.sin(x)
+
+    lowered = jax.jit(noisy).lower(jnp.ones((4,)))
+    report = lint_hlo.analyze_round_block(lowered)
+    assert report.host_custom_calls >= 1 or report.host_markers
+    violations = lint_hlo.check_round_block(
+        report, require_donation=False, require_scan=False,
+        require_flops=False)
+    assert violations
+
+
+def test_hlo_clean_scan_block_passes_end_to_end():
+    """A donated scan executable passes the full pytest helper."""
+    import jax
+    import jax.numpy as jnp
+
+    def block(state, n):
+        def body(c, _):
+            return c * 1.5 + 1.0, c.sum()
+        return jax.lax.scan(body, state, None, length=8)
+
+    jitted = jax.jit(block, static_argnums=1, donate_argnums=0)
+    report = lint_hlo.assert_round_block(
+        jitted.lower(jnp.ones((16, 16)), 8), expect_collectives=False)
+    assert report.donated and report.has_scan_loop and report.flops > 0
+
+
+def test_hlo_cli_usage_errors():
+    assert lint_hlo.main(["--engine", "fused", "--methods", "bogus"]) == 2
